@@ -1,0 +1,58 @@
+"""Beyond-paper ablation: the significance threshold mu (Eq. 7 gate) and the
+stochastic (Gumbel top-k) selection variant, at the paper's hardest cell
+(alpha=0.1, p_bc=0.1)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.ehfl_grid import BENCH_CNN, grid_settings, run_cell
+
+
+def run(quick: bool = True):
+    st = grid_settings(quick)
+    rows = []
+    # mu sweep (vaoi policy)
+    import json
+    from pathlib import Path
+
+    import jax
+    import numpy as np
+
+    from repro.core import EHFLConfig, run_simulation
+    from repro.data import make_federated_dataset
+    from repro.fl import cnn_backend
+
+    from benchmarks.ehfl_grid import CACHE
+
+    data = make_federated_dataset(
+        jax.random.PRNGKey(0), num_clients=st["num_clients"],
+        samples_per_client=st["samples"], alpha=0.1, test_size=300,
+        image_size=BENCH_CNN.image_size,
+    )
+    backend = cnn_backend(BENCH_CNN)
+    for policy, mu in [("vaoi", 0.1), ("vaoi", 0.5), ("vaoi", 2.0), ("vaoi_soft", 0.5)]:
+        tag = f"abl_{policy}_mu{mu}_N{st['num_clients']}_T{st['epochs']}"
+        f = CACHE / f"{tag}.json"
+        if f.exists():
+            rec = json.loads(f.read_text())
+        else:
+            cfg = EHFLConfig(
+                num_clients=st["num_clients"], epochs=st["epochs"], p_bc=0.1,
+                k=st["k"], mu=mu, policy=policy, alpha=0.1,
+                eval_every=st["eval_every"], probe_size=20,
+            )
+            out = run_simulation(cfg, backend, data)
+            m = out["metrics"]
+            rec = {
+                "f1": float(np.asarray(m["f1"])[-1]),
+                "energy": float(m["total_energy"]),
+                "mean_age": float(np.asarray(m["avg_age"]).mean()),
+            }
+            CACHE.mkdir(parents=True, exist_ok=True)
+            f.write_text(json.dumps(rec))
+        rows.append({
+            "name": f"ablation/{policy}/mu{mu}",
+            "us_per_call": 0.0,
+            "derived": f"final_f1={rec['f1']:.4f};energy={rec['energy']:.0f};mean_age={rec['mean_age']:.3f}",
+        })
+    return rows

@@ -1,0 +1,111 @@
+"""Shared EHFL sweep powering the Fig. 4 / 5 / 6 benchmarks.
+
+Paper protocol (§V) scaled to this CPU container: the full protocol is
+N=100 clients, T=500 epochs, 300 samples; the sweep below keeps every
+structural constant (S=30, kappa=20, E_max=kappa+5, k=10 scaled to N,
+mu=0.5, Dirichlet alpha grid, p_bc grid) and shrinks N/T/samples.
+Results are cached to experiments/ehfl_grid/<tag>.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs.cifar_cnn import CNNConfig
+from repro.core import EHFLConfig, run_simulation
+from repro.data import make_federated_dataset
+from repro.fl import cnn_backend
+
+CACHE = Path(__file__).resolve().parent.parent / "experiments" / "ehfl_grid"
+
+BENCH_CNN = CNNConfig(name="bench", image_size=16, conv_channels=(8, 8, 16, 16, 32, 32), fc_dims=(64, 32))
+
+POLICIES = ("vaoi", "fedavg", "fedbacys", "fedbacys_odd")
+
+
+def grid_settings(quick: bool):
+    if quick:
+        return dict(
+            alphas=(0.1, 1.0),
+            pbcs=(0.1, 1.0),
+            num_clients=16,
+            samples=40,
+            epochs=30,
+            eval_every=6,
+            k=4,
+        )
+    return dict(
+        alphas=(0.1, 1.0, 10.0),
+        pbcs=(0.01, 0.1, 1.0),
+        num_clients=40,
+        samples=120,
+        epochs=120,
+        eval_every=10,
+        k=8,
+    )
+
+
+def run_cell(policy: str, alpha: float, p_bc: float, st: dict, seed: int = 0) -> dict:
+    tag = (
+        f"{policy}_a{alpha}_p{p_bc}_N{st['num_clients']}_T{st['epochs']}"
+        f"_n{st['samples']}_s{seed}"
+    )
+    CACHE.mkdir(parents=True, exist_ok=True)
+    f = CACHE / f"{tag}.json"
+    if f.exists():
+        return json.loads(f.read_text())
+    data = make_federated_dataset(
+        jax.random.PRNGKey(seed),
+        num_clients=st["num_clients"],
+        samples_per_client=st["samples"],
+        alpha=alpha,
+        test_size=300,
+        image_size=BENCH_CNN.image_size,
+    )
+    cfg = EHFLConfig(
+        num_clients=st["num_clients"],
+        epochs=st["epochs"],
+        slots_per_epoch=30,
+        kappa=20,
+        p_bc=p_bc,
+        k=st["k"],
+        mu=0.5,
+        e_max=25,
+        policy=policy,
+        alpha=alpha,
+        seed=seed,
+        eval_every=st["eval_every"],
+        probe_size=20,
+    )
+    t0 = time.time()
+    out = run_simulation(cfg, cnn_backend(BENCH_CNN), data)
+    m = out["metrics"]
+    rec = {
+        "policy": policy,
+        "alpha": alpha,
+        "p_bc": p_bc,
+        "wall_s": round(time.time() - t0, 1),
+        "f1": np.asarray(m["f1"]).tolist(),
+        "f1_epochs": np.asarray(m["f1_epochs"]).tolist(),
+        "avg_age": np.asarray(m["avg_age"]).tolist(),
+        "energy_per_epoch": np.asarray(m["energy"]).tolist(),
+        "total_energy": float(m["total_energy"]),
+        "n_started": int(np.asarray(m["n_started"]).sum()),
+        "n_uploaded": int(np.asarray(m["n_uploaded"]).sum()),
+    }
+    f.write_text(json.dumps(rec))
+    return rec
+
+
+def run_grid(quick: bool = True, seed: int = 0):
+    st = grid_settings(quick)
+    cells = {}
+    for alpha in st["alphas"]:
+        for p_bc in st["pbcs"]:
+            for policy in POLICIES:
+                cells[(policy, alpha, p_bc)] = run_cell(policy, alpha, p_bc, st, seed)
+    return cells, st

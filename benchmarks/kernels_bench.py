@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks: jnp reference implementations timed on CPU
+(wall numbers are CPU-only; the Pallas kernels are TPU artifacts validated
+in interpret mode — see tests/test_kernels.py)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(quick: bool = True):
+    key = jax.random.PRNGKey(0)
+    rows = []
+    n, f = (1024, 4096) if quick else (8192, 16384)
+    v = jax.random.normal(key, (n, f))
+    h = jax.random.normal(key, (n, f))
+    age = jnp.ones((n,))
+    q = jnp.zeros((n,))
+    us = _time(jax.jit(lambda *a: ref.vaoi_distance_ref(*a, 0.5)), v, h, age, q)
+    rows.append({"name": f"kernel/vaoi_distance_ref/N{n}xF{f}", "us_per_call": us,
+                 "derived": f"bytes={2*n*f*4};GBps={2*n*f*4/us/1e3:.2f}"})
+    k, p = (64, 1 << 20) if quick else (128, 1 << 24)
+    msgs = jax.random.normal(key, (k, p))
+    w = jnp.ones((k,)) / k
+    us = _time(jax.jit(ref.fedavg_reduce_ref), msgs, w)
+    rows.append({"name": f"kernel/fedavg_reduce_ref/K{k}xP{p}", "us_per_call": us,
+                 "derived": f"GBps={k*p*4/us/1e3:.2f}"})
+    b, hh, s, d = (1, 4, 1024, 64) if quick else (2, 8, 4096, 128)
+    qq = jax.random.normal(key, (b, hh, s, d))
+    us = _time(jax.jit(lambda q_, k_, v_: ref.swa_attention_ref(q_, k_, v_, window=256)), qq, qq, qq)
+    flops = 4 * b * hh * s * 256 * d
+    rows.append({"name": f"kernel/swa_attention_ref/S{s}w256", "us_per_call": us,
+                 "derived": f"GFLOPs={flops/us/1e3:.2f}"})
+    return rows

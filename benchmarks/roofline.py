@@ -1,0 +1,55 @@
+"""Deliverable (g): roofline table from the dry-run artifacts.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+one row per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS ratio."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load_records():
+    recs = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        try:
+            r = json.loads(f.read_text())
+            r["_file"] = f.stem
+            recs.append(r)
+        except Exception:
+            pass
+    return recs
+
+
+def run(quick: bool = True):
+    rows = []
+    for rec in load_records():
+        variant = rec["_file"].split("__", 2)[-1].replace("__", "+")
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}/{variant}"
+        if "skipped" in rec:
+            rows.append({"name": name, "us_per_call": 0.0, "derived": f"skipped={rec['skipped']}"})
+            continue
+        if "error" in rec:
+            rows.append({"name": name, "us_per_call": 0.0, "derived": "ERROR"})
+            continue
+        r = rec["roofline"]
+        dom = r["bottleneck"]
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        ratio = rec.get("useful_flop_ratio")
+        rows.append(
+            {
+                "name": name,
+                "us_per_call": step_s * 1e6,  # roofline-bound step time
+                "derived": (
+                    f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+                    f"collective_s={r['collective_s']:.3e};bottleneck={dom};"
+                    f"useful_flop_ratio={ratio:.3f}" if ratio else f"bottleneck={dom}"
+                ),
+            }
+        )
+    if not rows:
+        rows.append({"name": "roofline/NO_DRYRUN_DATA", "us_per_call": 0.0,
+                     "derived": "run: python -m repro.launch.dryrun --all"})
+    return rows

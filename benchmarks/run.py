@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure + infra rooflines.
+
+Prints ``name,us_per_call,derived`` CSV.  Default is the quick protocol
+(CPU-feasible, same structural constants as the paper); ``--full`` runs the
+3x3 (alpha x p_bc) grid at larger N/T.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma list from: fig4,fig5,fig6,roofline,kernels,ablation",
+    )
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import ablation_mu, fig4_f1, fig5_vaoi, fig6_energy, kernels_bench, roofline
+
+    suites = {
+        "kernels": kernels_bench.run,
+        "roofline": roofline.run,
+        "fig4": fig4_f1.run,
+        "fig5": fig5_vaoi.run,
+        "fig6": fig6_energy.run,
+        "ablation": ablation_mu.run,
+    }
+    wanted = args.only.split(",") if args.only else list(suites)
+
+    print("name,us_per_call,derived")
+    for name in wanted:
+        t0 = time.time()
+        try:
+            rows = suites[name](quick=quick)
+        except Exception as e:  # keep the harness going
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            continue
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+        print(f"{name}/_suite_wall,{(time.time()-t0)*1e6:.0f},ok", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

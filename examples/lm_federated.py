@@ -1,0 +1,28 @@
+"""VAoI-scheduled federated finetuning of an assigned-architecture LM —
+the paper's scheduler driving a modern transformer client (reduced config
+on CPU; the same path targets the production mesh via repro.launch).
+
+  PYTHONPATH=src python examples/lm_federated.py --arch qwen1.5-0.5b --rounds 3
+"""
+import argparse
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--clients", type=int, default=6)
+    args = ap.parse_args()
+    # thin wrapper over the launcher (same public entry point used at scale)
+    sys.exit(
+        subprocess.call(
+            [
+                sys.executable, "-m", "repro.launch.train",
+                "--arch", args.arch, "--reduced",
+                "--clients", str(args.clients),
+                "--rounds", str(args.rounds),
+                "--k", "2", "--steps-per-round", "4",
+            ]
+        )
+    )

@@ -1,0 +1,61 @@
+"""Batched serving demo: prefill + KV-cache decode on an assigned arch.
+
+  PYTHONPATH=src python examples/serve_demo.py --arch starcoder2-3b --tokens 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models import decoder
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    key = jax.random.PRNGKey(args.seed)
+    params = decoder.init_params(cfg, key, max_seq=256)
+    B, P = args.batch, args.prompt_len
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+
+    cache_len = P + args.tokens
+    cache = decoder.init_cache(cfg, B, cache_len)
+
+    step = jax.jit(
+        lambda params, cache, tok, pos: decoder.decode_step(cfg, params, cache, tok, pos)
+    )
+
+    # prefill by stepping the prompt through the cache (decode-based prefill)
+    t0 = time.time()
+    for t in range(P):
+        logits, cache = step(params, cache, prompts[:, t : t + 1], jnp.full((B,), t))
+    jax.block_until_ready(logits)
+    print(f"prefill({P} tokens): {time.time()-t0:.2f}s (includes jit)")
+
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    generated = [tok]
+    t0 = time.time()
+    for t in range(P, P + args.tokens - 1):
+        logits, cache = step(params, cache, tok, jnp.full((B,), t))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    out = jnp.concatenate(generated, axis=1)
+    print(f"decoded {args.tokens-1} tokens x batch {B} in {dt:.2f}s "
+          f"({B*(args.tokens-1)/max(dt,1e-9):.1f} tok/s on CPU, reduced config)")
+    for b in range(B):
+        print(f"  seq[{b}]: {out[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

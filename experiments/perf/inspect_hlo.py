@@ -1,0 +1,45 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re, collections
+sys.path.insert(0, "src")
+import jax
+from repro.launch.dryrun import run_one
+import repro.launch.dryrun as dr
+from repro.configs import get_config, INPUT_SHAPES, input_specs
+from repro.launch import sharding, steps
+from repro.launch.mesh import make_production_mesh
+from repro.models import decoder
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+ce = sys.argv[3] if len(sys.argv) > 3 else "gather"
+emb = sys.argv[4] if len(sys.argv) > 4 else None
+cfg = get_config(arch)
+shape = INPUT_SHAPES[shape_name]
+mesh = make_production_mesh()
+key = jax.random.PRNGKey(0)
+params_shape = jax.eval_shape(lambda: decoder.init_params(cfg, key, max_seq=shape.seq_len))
+p_shard = sharding.params_shardings(params_shape, mesh, "fsdp", emb)
+p_abs = jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh), params_shape, p_shard)
+specs = input_specs(cfg, shape)
+in_shard = sharding.input_shardings(specs, mesh)
+batch_abs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=in_shard[k]) for k, v in specs.items()}
+step = steps.make_train_step(cfg, remat=True, ce_impl=ce)
+lowered = jax.jit(step, out_shardings=(sharding.replicated(mesh), p_shard)).lower(p_abs, batch_abs)
+compiled = lowered.compile()
+hlo = compiled.as_text()
+
+DT = {"bf16":2,"f32":4,"f16":2,"s32":4,"u32":4,"pred":1,"s8":1}
+rows = []
+for line in hlo.splitlines():
+    m = re.search(r"=\s+(\w+)\[([\d,]*)\][^ ]*\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\(", line)
+    if not m: continue
+    dt, dims, op = m.group(1), m.group(2), m.group(3)
+    n = 1
+    for d in dims.split(","):
+        if d: n *= int(d)
+    size = n * DT.get(dt, 4)
+    meta = re.search(r'op_name="([^"]+)"', line)
+    rows.append((size, op, f"{dt}[{dims}]", (meta.group(1) if meta else "?")[:110]))
+rows.sort(reverse=True)
+for size, op, shp, meta in rows[:15]:
+    print(f"{size/1e9:8.2f}GB {op:18s} {shp:32s} {meta}")

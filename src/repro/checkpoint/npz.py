@@ -1,0 +1,49 @@
+"""Minimal npz-based pytree checkpointing (offline container: no orbax).
+
+Leaves are flattened to '/'-joined key paths; dtypes/shapes round-trip
+exactly (bf16 is stored via a uint16 view)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(kp) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+
+
+def save_pytree(tree: Any, path: str | Path) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat: dict[str, np.ndarray] = {}
+    meta: dict[str, str] = {}
+
+    def record(kp, leaf):
+        key = _path_str(kp)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            meta[key] = "bfloat16"
+            arr = arr.view(np.uint16)
+        flat[key] = arr
+
+    jax.tree_util.tree_map_with_path(record, tree)
+    np.savez(path, __meta__=json.dumps(meta), **flat)
+
+
+def load_pytree(template: Any, path: str | Path) -> Any:
+    data = np.load(Path(path), allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+
+    def restore(kp, leaf):
+        key = _path_str(kp)
+        arr = data[key]
+        if meta.get(key) == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        return jnp.asarray(arr).astype(leaf.dtype).reshape(leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(restore, template)

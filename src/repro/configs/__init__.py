@@ -1,0 +1,10 @@
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    get_config,
+    input_specs,
+    list_configs,
+    reduced,
+    register,
+)

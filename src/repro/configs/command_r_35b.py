@@ -1,0 +1,22 @@
+"""Command-R 35B [hf:CohereForAI/c4ai-command-r-v01] — dense GQA, no bias, layernorm."""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="command-r-35b",
+        family="dense",
+        num_layers=40,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        d_ff=22528,
+        vocab_size=256000,
+        norm="layernorm",
+        tie_embeddings=True,
+        rope_theta=8_000_000.0,
+        dtype=jnp.bfloat16,
+        source="hf:CohereForAI/c4ai-command-r-v01",
+    )
+)

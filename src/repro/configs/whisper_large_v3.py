@@ -1,0 +1,28 @@
+"""Whisper-large-v3 [arXiv:2212.04356] — enc-dec transformer; mel+conv frontend STUBBED
+(input_specs provides (B, 1500, d_model) frame embeddings — the carve-out)."""
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="whisper-large-v3",
+        family="audio",
+        num_layers=32,  # decoder layers
+        num_encoder_layers=32,
+        is_encoder_decoder=True,
+        encoder_seq=1500,
+        d_model=1280,
+        num_heads=20,
+        num_kv_heads=20,
+        d_ff=5120,
+        vocab_size=51866,
+        use_rope=False,  # learned absolute positions
+        act="gelu",
+        norm="layernorm",
+        qkv_bias=True,
+        attn_out_bias=True,
+        dtype=jnp.bfloat16,
+        source="arXiv:2212.04356",
+    )
+)

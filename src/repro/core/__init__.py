@@ -1,0 +1,4 @@
+# The paper's primary contribution: feature-based semantics-aware (VAoI)
+# scheduling for energy-harvesting federated learning.
+from repro.core.simulator import Backend, EHFLConfig, run_simulation  # noqa: F401
+from repro.core.vaoi import client_select, feature_distance, select_topk, vaoi_update  # noqa: F401

@@ -1,0 +1,122 @@
+"""Energy-harvesting battery substrate (§III-C, Eq. 3/4) — the slot-level
+dynamics of one FL epoch, fully vectorized over clients and scanned over
+slots.
+
+Semantics (faithful to the paper):
+  * at the beginning of each slot a unit of energy arrives w.p. p_bc
+    (Bernoulli), battery capped at E_max;
+  * actions: idle (0 energy), transmit (1 slot, 1 unit),
+    train (kappa slots, kappa units);  strict energy causality;
+  * a training run occupies kappa consecutive slots; we require
+    start_slot <= S - kappa so runs complete within the epoch (FedBacys'
+    deadline semantics; adopted for all policies — see DESIGN.md §6);
+  * a completed update is transmitted at the first later slot with E >= 1.
+
+``scan_epoch`` is policy-parametric through ``want_fn(slot, state) -> (N,)``,
+the mask of clients that would *like* to start training at this slot.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SlotState(NamedTuple):
+    battery: jax.Array  # (N,) int32
+    started: jax.Array  # (N,) bool — started training this epoch
+    start_slot: jax.Array  # (N,) int32 (S if not started)
+    pending: jax.Array  # (N,) bool — has an unsent message
+    uploaded: jax.Array  # (N,) bool — uploaded during this epoch
+    counter: jax.Array  # (N,) int32 — FedBacys-Odd opportunity counter
+    energy_used: jax.Array  # (N,) int32 — cumulative units consumed
+    key: jax.Array
+
+
+def harvest_step(key: jax.Array, battery: jax.Array, p_bc: float, e_max: int) -> Tuple[jax.Array, jax.Array]:
+    k1, k2 = jax.random.split(key)
+    charge = jax.random.bernoulli(k1, p_bc, battery.shape).astype(battery.dtype)
+    return jnp.minimum(battery + charge, e_max), k2
+
+
+def scan_epoch(
+    state: SlotState,
+    *,
+    S: int,
+    kappa: int,
+    p_bc: float,
+    e_max: int,
+    want_fn: Callable[[jax.Array, SlotState], jax.Array],
+    count_opportunity_fn: Callable[[jax.Array, SlotState], jax.Array] | None = None,
+) -> SlotState:
+    """Run S slots of battery/action dynamics. Returns the post-epoch state.
+
+    ``count_opportunity_fn`` (FedBacys-Odd): mask of clients whose opportunity
+    counter increments this slot (criteria (i)-(iii) met).
+    """
+
+    def slot_body(st: SlotState, s: jax.Array) -> Tuple[SlotState, None]:
+        battery, key = harvest_step(st.key, st.battery, p_bc, e_max)
+        st = st._replace(battery=battery, key=key)
+        busy = st.started & (s >= st.start_slot) & (s < st.start_slot + kappa)
+        # --- opportunity counting (before the odd-gate decides) ---
+        counter = st.counter
+        if count_opportunity_fn is not None:
+            opp = count_opportunity_fn(s, st) & ~busy
+            counter = counter + opp.astype(counter.dtype)
+            st = st._replace(counter=counter)
+        # --- start training ---
+        want = want_fn(s, st)
+        can = (
+            (~st.started)
+            & (~busy)
+            & (~st.pending)
+            & (st.battery >= kappa)
+            & (s <= S - kappa)
+        )
+        start = want & can
+        battery = st.battery - jnp.where(start, kappa, 0)
+        energy_used = st.energy_used + jnp.where(start, kappa, 0)
+        started = st.started | start
+        start_slot = jnp.where(start, s, st.start_slot)
+        busy = started & (s >= start_slot) & (s < start_slot + kappa)
+        # --- completion -> message pending ---
+        done_now = started & (s + 1 == start_slot + kappa)
+        pending = st.pending | done_now
+        # --- transmit (cannot transmit while busy; 1 unit) ---
+        can_tx = pending & ~busy & ~done_now & (battery >= 1) & ~st.uploaded
+        battery = battery - can_tx.astype(battery.dtype)
+        energy_used = energy_used + can_tx.astype(energy_used.dtype)
+        pending = pending & ~can_tx
+        uploaded = st.uploaded | can_tx
+        return (
+            st._replace(
+                battery=battery,
+                started=started,
+                start_slot=start_slot,
+                pending=pending,
+                uploaded=uploaded,
+                energy_used=energy_used,
+            ),
+            None,
+        )
+
+    state, _ = jax.lax.scan(slot_body, state, jnp.arange(S))
+    return state
+
+
+def init_slot_state(n: int, key: jax.Array, battery: jax.Array | None = None, S: int = 30) -> SlotState:
+    z = jnp.zeros((n,), jnp.int32)
+    f = jnp.zeros((n,), bool)
+    return SlotState(
+        battery=z if battery is None else battery,
+        started=f,
+        start_slot=jnp.full((n,), S, jnp.int32),
+        pending=f,
+        uploaded=f,
+        counter=z,
+        energy_used=z,
+        key=key,
+    )

@@ -1,0 +1,108 @@
+"""Scheduling policies (§V benchmarks + the paper's VAoI scheme).
+
+Each policy supplies, per epoch:
+  * ``select(age, key) -> (N,) bool`` — who *wants* to train this epoch;
+  * ``want_fn(selected)`` — slot-level start rule for the energy scan;
+  * whether it maintains VAoI state (only the paper's scheme does).
+
+Policies:
+  vaoi          — the paper: top-k by VAoI, start ASAP within the epoch.
+  fedavg        — greedy energy-aware baseline: everyone, ASAP.
+  fedbacys      — cyclic groups; procrastinate to the last feasible slot.
+  fedbacys_odd  — FedBacys + odd-chance rule (skip every other opportunity).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vaoi as vaoi_lib
+from repro.core.energy import SlotState
+
+POLICIES = ("vaoi", "vaoi_soft", "fedavg", "fedbacys", "fedbacys_odd")
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    name: str
+    uses_vaoi: bool
+    cyclic_groups: int = 0  # FedBacys group count G (0 = none)
+
+
+def make_policy(name: str, *, num_clients: int, k: int, num_groups: int = 0) -> PolicySpec:
+    if name not in POLICIES:
+        raise ValueError(f"unknown policy {name!r}; known: {POLICIES}")
+    if name in ("fedbacys", "fedbacys_odd") and num_groups == 0:
+        num_groups = max(1, num_clients // max(k, 1))
+    return PolicySpec(name=name, uses_vaoi=name.startswith("vaoi"), cyclic_groups=num_groups)
+
+
+def epoch_selection(
+    spec: PolicySpec,
+    age: jax.Array,
+    epoch: jax.Array,
+    k: int,
+    key: jax.Array,
+) -> jax.Array:
+    """(N,) mask of clients scheduled for this epoch."""
+    n = age.shape[0]
+    if spec.name == "vaoi":
+        return vaoi_lib.select_topk(age, k, key)
+    if spec.name == "vaoi_soft":
+        return vaoi_lib.select_gumbel(age, k, key)
+    if spec.name == "fedavg":
+        return jnp.ones((n,), bool)
+    # FedBacys variants: group g participates in epoch t iff g == t mod G
+    G = spec.cyclic_groups
+    groups = jnp.arange(n) % G
+    return groups == (epoch % G)
+
+
+def make_want_fn(
+    spec: PolicySpec, selected: jax.Array, S: int, kappa: int
+) -> Callable[[jax.Array, SlotState], jax.Array]:
+    """Slot-level 'wants to start training now' rule."""
+    last = S - kappa
+
+    if spec.name in ("vaoi", "vaoi_soft", "fedavg"):
+        # start as soon as feasible within the epoch
+        def want(s, st: SlotState):
+            return selected
+
+        return want
+
+    if spec.name == "fedbacys":
+        def want(s, st: SlotState):
+            return selected & (s == last)
+
+        return want
+
+    # fedbacys_odd: also require an odd opportunity counter (counter is
+    # incremented by count_opportunity_fn before this is evaluated)
+    def want(s, st: SlotState):
+        return selected & (s == last) & (st.counter % 2 == 1)
+
+    return want
+
+
+def make_opportunity_fn(
+    spec: PolicySpec, selected: jax.Array, S: int, kappa: int
+) -> Optional[Callable[[jax.Array, SlotState], jax.Array]]:
+    """FedBacys-Odd: opportunities = slots where criteria (i)-(iii) are met."""
+    if spec.name != "fedbacys_odd":
+        return None
+    last = S - kappa
+
+    def opp(s, st: SlotState):
+        return (
+            selected
+            & (s == last)
+            & (~st.started)
+            & (~st.pending)
+            & (st.battery >= kappa)
+        )
+
+    return opp

@@ -1,0 +1,237 @@
+"""Alg. 1 — the full EHFL loop, as a single jitted program.
+
+TPU-native formulation (see DESIGN.md §3): all per-client state is stacked on
+a leading N axis (batteries, ages, pending flags, feature moments, *and model
+parameters*); epochs are a ``lax.scan``; the slot-level energy dynamics are an
+inner scan of cheap integer ops (``repro.core.energy``); local training is a
+vmapped ``kappa``-step SGD scan.  The client axis is what shards over the
+``data`` mesh axis at scale.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import energy as energy_lib
+from repro.core import policies as policy_lib
+from repro.core import vaoi as vaoi_lib
+from repro.optim import sgd_update
+
+
+@dataclass(frozen=True)
+class EHFLConfig:
+    num_clients: int = 100
+    epochs: int = 500
+    slots_per_epoch: int = 30  # S
+    kappa: int = 20  # training cost in slots == battery units
+    p_bc: float = 0.1  # Bernoulli harvest probability
+    k: int = 10  # selection budget (Alg. 2)
+    mu: float = 0.5  # VAoI significance threshold
+    lr: float = 0.01  # SGD gamma
+    probe_size: int = 30  # |B_i| for the proxy forward pass
+    e_max: int = 25  # kappa + 5
+    policy: str = "vaoi"
+    alpha: float = 0.1  # Dirichlet concentration (data partition)
+    seed: int = 0
+    eval_every: int = 10
+    aux_note: str = ""
+
+
+class Backend(NamedTuple):
+    """Model plug-in for the simulator (CNN for the paper; LMs at scale)."""
+
+    init: Callable[[jax.Array], Any]
+    grad_loss: Callable[[Any, jax.Array, jax.Array], Tuple[jax.Array, Any]]
+    feature: Callable[[Any, jax.Array], jax.Array]  # (params, inputs) -> (F,)
+    predict: Callable[[Any, jax.Array], jax.Array]
+    feature_dim: int
+    num_classes: int
+
+
+class EpochCarry(NamedTuple):
+    global_params: Any
+    msg_params: Any  # (N, ...) stacked messages
+    h: jax.Array  # (N, F) historical moments
+    age: jax.Array  # (N,)
+    battery: jax.Array  # (N,)
+    pending: jax.Array  # (N,) bool
+    counter: jax.Array  # (N,)
+    key: jax.Array
+
+
+def _local_train(
+    params: Any,
+    images: jax.Array,
+    labels: jax.Array,
+    key: jax.Array,
+    cfg: EHFLConfig,
+    backend: Backend,
+) -> Tuple[Any, jax.Array]:
+    """BATCHTRAIN (Alg. 1 lines 23-29): kappa minibatch SGD steps over one
+    permutation pass; accumulates Eq. (6) historical moment."""
+    n = images.shape[0]
+    bs = max(1, n // cfg.kappa)
+    perm = jax.random.permutation(key, n)[: cfg.kappa * bs].reshape(cfg.kappa, bs)
+
+    def step(carry, idx):
+        params, fsum = carry
+        imgs, lbls = images[idx], labels[idx]
+        _, grads = backend.grad_loss(params, imgs, lbls)
+        params = sgd_update(params, grads, cfg.lr)
+        f = backend.feature(params, imgs)  # batch-mean feature of w^(t,b+1)
+        return (params, fsum + f * bs), None
+
+    (params, fsum), _ = jax.lax.scan(step, (params, jnp.zeros((backend.feature_dim,), jnp.float32)), perm)
+    return params, fsum / (cfg.kappa * bs)
+
+
+def _masked_mean(stacked: Any, mask: jax.Array, fallback: Any) -> Any:
+    """FedAvg over the masked clients; fallback when no uploads."""
+    cnt = jnp.sum(mask.astype(jnp.float32))
+
+    def agg(leaf, fb):
+        m = mask.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        s = jnp.sum(leaf * m, axis=0) / jnp.maximum(cnt, 1.0).astype(leaf.dtype)
+        return jnp.where(cnt > 0, s, fb)
+
+    return jax.tree.map(agg, stacked, fallback)
+
+
+def run_simulation(
+    cfg: EHFLConfig,
+    backend: Backend,
+    data: Dict[str, jax.Array],
+    use_kernel: bool = False,
+) -> Dict[str, Any]:
+    """Run T epochs of Alg. 1. Returns metric trajectories + final model."""
+    N, S, kappa = cfg.num_clients, cfg.slots_per_epoch, cfg.kappa
+    spec = policy_lib.make_policy(cfg.policy, num_clients=N, k=cfg.k)
+    key = jax.random.PRNGKey(cfg.seed)
+    k_init, k_run = jax.random.split(key)
+
+    global_params = backend.init(k_init)
+    msg_params = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (N,) + x.shape), global_params)
+    probe_imgs = data["images"][:, : cfg.probe_size]
+
+    carry0 = EpochCarry(
+        global_params=global_params,
+        msg_params=msg_params,
+        h=jnp.zeros((N, backend.feature_dim), jnp.float32),
+        age=jnp.zeros((N,), jnp.float32),
+        battery=jnp.zeros((N,), jnp.int32),
+        pending=jnp.zeros((N,), bool),
+        counter=jnp.zeros((N,), jnp.int32),
+        key=k_run,
+    )
+
+    def epoch_body(carry: EpochCarry, t: jax.Array):
+        k_sel, k_scan, k_train, k_next = jax.random.split(carry.key, 4)
+
+        # --- CLIENTSELECT (Alg. 2) on the freshly-broadcast global model ---
+        if spec.uses_vaoi:
+            v = jax.vmap(lambda imgs: backend.feature(carry.global_params, imgs))(probe_imgs)
+            selected = policy_lib.epoch_selection(spec, carry.age, t, cfg.k, k_sel)
+            if use_kernel:  # fused Pallas kernel (Eq. 5 + Eq. 7 in one pass)
+                from repro.kernels import ops as kops
+
+                m, age = kops.vaoi_distance(
+                    v, carry.h, carry.age, selected.astype(jnp.float32), cfg.mu
+                )
+            else:
+                m = vaoi_lib.feature_distance(v, carry.h)
+                age = vaoi_lib.vaoi_update(carry.age, m, selected.astype(jnp.float32), cfg.mu)
+        else:
+            selected = policy_lib.epoch_selection(spec, carry.age, t, cfg.k, k_sel)
+            age = carry.age
+            m = jnp.zeros((N,), jnp.float32)
+
+        # --- slot-level energy dynamics ---
+        want_fn = policy_lib.make_want_fn(spec, selected, S, kappa)
+        opp_fn = policy_lib.make_opportunity_fn(spec, selected, S, kappa)
+        st0 = energy_lib.SlotState(
+            battery=carry.battery,
+            started=jnp.zeros((N,), bool),
+            start_slot=jnp.full((N,), S, jnp.int32),
+            pending=carry.pending,
+            uploaded=jnp.zeros((N,), bool),
+            counter=carry.counter,
+            energy_used=jnp.zeros((N,), jnp.int32),
+            key=k_scan,
+        )
+        st = energy_lib.scan_epoch(
+            st0, S=S, kappa=kappa, p_bc=cfg.p_bc, e_max=cfg.e_max,
+            want_fn=want_fn, count_opportunity_fn=opp_fn,
+        )
+
+        # --- local training (vmapped; masked by st.started) ---
+        pending_in = carry.pending  # entered the epoch with an unsent (old) message?
+        train_keys = jax.random.split(k_train, N)
+        trained, h_new = jax.vmap(
+            lambda imgs, lbls, k: _local_train(carry.global_params, imgs, lbls, k, cfg, backend)
+        )(data["images"], data["labels"], train_keys)
+        started_m = st.started
+        sel = lambda new, old: jax.tree.map(
+            lambda a, b: jnp.where(started_m.reshape((-1,) + (1,) * (a.ndim - 1)), a, b), new, old
+        )
+        msg_params = sel(trained, carry.msg_params)
+        h = jnp.where(started_m[:, None], h_new, carry.h)
+
+        # --- aggregation (uploads of this epoch; old-pending uploads use old msgs) ---
+        contrib = jax.tree.map(
+            lambda old, new: jnp.where(
+                pending_in.reshape((-1,) + (1,) * (old.ndim - 1)), old, new
+            ),
+            carry.msg_params,
+            msg_params,
+        )
+        new_global = _masked_mean(contrib, st.uploaded, carry.global_params)
+
+        metrics = {
+            "energy": jnp.sum(st.energy_used),
+            "avg_age": jnp.mean(age),
+            "n_started": jnp.sum(st.started.astype(jnp.int32)),
+            "n_uploaded": jnp.sum(st.uploaded.astype(jnp.int32)),
+            "avg_m": jnp.mean(m),
+        }
+        return (
+            EpochCarry(
+                global_params=new_global,
+                msg_params=msg_params,
+                h=h,
+                age=age,
+                battery=st.battery,
+                pending=st.pending,
+                counter=st.counter,
+                key=k_next,
+            ),
+            metrics,
+        )
+
+    scan_chunk = jax.jit(lambda c, ts: jax.lax.scan(epoch_body, c, ts))
+
+    carry = carry0
+    all_metrics = []
+    f1s, f1_epochs = [], []
+    eval_fn = jax.jit(lambda p, x: backend.predict(p, x))
+    from repro.models.cnn import macro_f1
+
+    chunk = max(1, cfg.eval_every)
+    t = 0
+    while t < cfg.epochs:
+        n = min(chunk, cfg.epochs - t)
+        carry, ms = scan_chunk(carry, jnp.arange(t, t + n))
+        all_metrics.append(ms)
+        preds = eval_fn(carry.global_params, data["test_images"])
+        f1s.append(float(macro_f1(preds, data["test_labels"], backend.num_classes)))
+        f1_epochs.append(t + n)
+        t += n
+
+    metrics = {k: jnp.concatenate([m[k] for m in all_metrics]) for k in all_metrics[0]}
+    metrics["f1"] = jnp.array(f1s)
+    metrics["f1_epochs"] = jnp.array(f1_epochs)
+    metrics["total_energy"] = jnp.sum(metrics["energy"])
+    return {"metrics": metrics, "global_params": carry.global_params, "carry": carry}

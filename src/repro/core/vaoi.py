@@ -1,0 +1,74 @@
+"""Version Age of Information (VAoI) — Eq. (2)/(7) of the paper, plus the
+feature-based dissimilarity proxy M_i (Eq. 5) and Alg. 2 client selection.
+
+All functions are pure jnp (the Pallas kernel in ``repro.kernels`` is the
+TPU-optimized fused version of :func:`vaoi_update`; ``tests/test_kernels.py``
+asserts they agree).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def feature_distance(v: jax.Array, h: jax.Array) -> jax.Array:
+    """M_i = ||v_i - h_i||_2 per client. v, h: (N, F) -> (N,)."""
+    diff = v.astype(jnp.float32) - h.astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+
+
+def vaoi_update(age: jax.Array, m: jax.Array, q: jax.Array, mu: float) -> jax.Array:
+    """Eq. (7): X(t+1) = (X+1)(1-q) if M >= mu else X(1-q).
+
+    age: (N,) float; m: (N,) distances; q: (N,) {0,1} participation.
+    """
+    inc = jnp.where(m >= mu, age + 1.0, age)
+    return inc * (1.0 - q.astype(age.dtype))
+
+
+def select_topk(age: jax.Array, k: int, key: jax.Array) -> jax.Array:
+    """Alg. 2: normalize p_i = X_i / sum X_j, take the k largest.
+
+    Random tie-breaking (also covers the all-zero cold start, where selection
+    degenerates to uniform sampling of k clients). Returns a boolean mask (N,).
+    """
+    n = age.shape[0]
+    noise = jax.random.uniform(key, (n,), minval=0.0, maxval=1e-3)
+    total = jnp.sum(age)
+    p = jnp.where(total > 0, age / jnp.maximum(total, 1e-12), 0.0)
+    scores = p + noise
+    _, idx = jax.lax.top_k(scores, k)
+    return jnp.zeros((n,), bool).at[idx].set(True)
+
+
+def select_gumbel(age: jax.Array, k: int, key: jax.Array) -> jax.Array:
+    """Sample k clients WITHOUT replacement with probability proportional to
+    p_i = X_i / sum X_j (Gumbel-top-k).  A stochastic variant of Alg. 2's
+    deterministic top-k (beyond-paper ablation: exploration under ties)."""
+    n = age.shape[0]
+    logp = jnp.where(age > 0, jnp.log(jnp.maximum(age, 1e-12)), -20.0)
+    g = jax.random.gumbel(key, (n,))
+    _, idx = jax.lax.top_k(logp + g, k)
+    return jnp.zeros((n,), bool).at[idx].set(True)
+
+
+def client_select(
+    age: jax.Array,
+    v: jax.Array,
+    h: jax.Array,
+    k: int,
+    mu: float,
+    key: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Alg. 2 CLIENTSELECT: returns (selected mask, new ages, distances M).
+
+    v: (N, F) feature vectors of the *global* model on each client's probe
+    batch (one forward pass, line 7); h: (N, F) stored historical moments.
+    """
+    selected = select_topk(age, k, key)
+    m = feature_distance(v, h)
+    q = selected.astype(jnp.float32)
+    new_age = vaoi_update(age, m, q, mu)
+    return selected, new_age, m

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    dirichlet_label_partition,
+    make_federated_dataset,
+    make_token_dataset,
+)

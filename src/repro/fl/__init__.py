@@ -1,0 +1,1 @@
+from repro.fl.backend import cnn_backend, lm_backend  # noqa: F401

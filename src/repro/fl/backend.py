@@ -1,0 +1,51 @@
+"""Backends binding models to the EHFL simulator."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cifar_cnn import CNNConfig
+from repro.core.simulator import Backend
+from repro.models import cnn
+
+
+def cnn_backend(cfg: CNNConfig) -> Backend:
+    grad_loss = jax.value_and_grad(lambda p, x, y: cnn.loss_fn(cfg, p, x, y))
+    return Backend(
+        init=lambda key: cnn.init_params(cfg, key),
+        grad_loss=grad_loss,
+        feature=lambda p, x: cnn.feature_vector(cfg, p, x),
+        predict=lambda p, x: cnn.predictions(cfg, p, x),
+        feature_dim=cfg.num_classes,
+        num_classes=cfg.num_classes,
+    )
+
+
+def lm_backend(model_cfg) -> Backend:
+    """LM-as-client backend: tokens in, next-token loss, output-distribution
+    feature tap (the paper's proxy at modern scale).  'images' = token
+    sequences (N, n, S); 'labels' unused (LM loss is self-supervised)."""
+    from repro.models import decoder
+
+    def loss(p, toks, _labels):
+        batch = {"tokens": toks, "labels": toks}
+        l, _ = decoder.loss_fn(model_cfg, p, batch)
+        return l
+
+    grad_loss = jax.value_and_grad(loss)
+
+    def feature(p, toks):
+        return decoder.feature_vector(model_cfg, p, toks)
+
+    def predict(p, toks):
+        logits, _ = decoder.forward_logits(model_cfg, p, toks)
+        return jnp.argmax(logits[:, -1], axis=-1)
+
+    return Backend(
+        init=lambda key: decoder.init_params(model_cfg, key),
+        grad_loss=grad_loss,
+        feature=feature,
+        predict=predict,
+        feature_dim=model_cfg.vocab_size,
+        num_classes=model_cfg.vocab_size,
+    )

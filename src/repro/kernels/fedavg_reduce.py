@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: weighted FedAvg aggregation.
+
+out[p] = sum_k weights[k] * msgs[k, p] — K client update vectors of length P
+reduced into the new global.  Pure bandwidth (no MXU): tiles of (BK, BP)
+stream through VMEM; the P axis is the parallel grid dim, K is reduced with a
+VMEM fp32 accumulator so bf16 messages aggregate without precision loss.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(msgs_ref, w_ref, out_ref, acc_ref):
+    kblk = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(kblk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    m = msgs_ref[...].astype(jnp.float32)  # (BK, BP)
+    w = w_ref[...].astype(jnp.float32)  # (BK,)
+    acc_ref[...] += jnp.sum(m * w[:, None], axis=0)
+
+    @pl.when(kblk == nk - 1)
+    def _finalize():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "block_p", "interpret"))
+def fedavg_reduce(
+    msgs: jax.Array,
+    weights: jax.Array,
+    *,
+    block_k: int = 64,
+    block_p: int = 2048,
+    interpret: bool = False,
+) -> jax.Array:
+    """msgs: (K, P); weights: (K,) -> (P,) fp32 weighted sum."""
+    K, P = msgs.shape
+    bk, bp = min(block_k, K), min(block_p, P)
+    pad_k, pad_p = (-K) % bk, (-P) % bp
+    if pad_k or pad_p:
+        msgs = jnp.pad(msgs, ((0, pad_k), (0, pad_p)))
+        weights = jnp.pad(weights, (0, pad_k))
+    Kp, Pp = K + pad_k, P + pad_p
+    grid = (Pp // bp, Kp // bk)  # K innermost (reduction)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bp), lambda p, k: (k, p)),
+            pl.BlockSpec((bk,), lambda p, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda p, k: (p,)),
+        out_shape=jax.ShapeDtypeStruct((Pp,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bp,), jnp.float32)],
+        interpret=interpret,
+    )(msgs, weights)
+    return out[:P]

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vaoi_distance_ref(
+    v: jax.Array, h: jax.Array, age: jax.Array, q: jax.Array, mu: float
+) -> tuple[jax.Array, jax.Array]:
+    """Fused Eq. (5) + Eq. (7): distances M_i and updated ages.
+
+    v, h: (N, F) float; age: (N,) float32; q: (N,) float32 in {0,1}.
+    Returns (m (N,), new_age (N,)).
+    """
+    diff = v.astype(jnp.float32) - h.astype(jnp.float32)
+    m = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+    inc = jnp.where(m >= mu, age + 1.0, age)
+    return m, inc * (1.0 - q)
+
+
+def fedavg_reduce_ref(msgs: jax.Array, weights: jax.Array) -> jax.Array:
+    """Weighted aggregation: msgs (K, P), weights (K,) -> (P,) in fp32."""
+    w = weights.astype(jnp.float32)
+    return jnp.einsum("kp,k->p", msgs.astype(jnp.float32), w)
+
+
+def swa_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, window: int = 0, causal: bool = True
+) -> jax.Array:
+    """Sliding-window attention oracle. q,k,v: (B, H, S, D). window=0 => full."""
+    B, H, S, D = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(D))
+    iq = jnp.arange(S)[:, None]
+    jk = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= jk <= iq
+    if window > 0:
+        mask &= jk > iq - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    attn = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", attn, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """SSD oracle: exact sequential recurrence (O(S) states, fp32).
+
+    x (B,S,nh,hp); dt (B,S,nh); A (nh,); Bm, Cm (B,S,ds).
+    Returns (y (B,S,nh,hp), final_state (B,nh,hp,ds)).
+    """
+    B_, S, nh, hp = x.shape
+    ds = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def step(state, t):
+        xt, dtt, bt, ct = t  # (B,nh,hp), (B,nh), (B,ds), (B,ds)
+        decay = jnp.exp(dtt * A[None, :])  # (B,nh)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    init = jnp.zeros((B_, nh, hp, ds), jnp.float32)
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2), Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3), final

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: fused Mamba2 SSD scan (state-space duality).
+
+One kernel fuses, per (batch, head) and sequentially over chunks:
+  * the intra-chunk quadratic form  y_diag = (C Bᵀ ∘ L) · (x·dt)   (MXU)
+  * the inter-chunk contribution    y_off  = exp(a⁺) · (C · Sᵀ)
+  * the state recurrence            S' = S·exp(Σa) + (x·dt)ᵀ·(B·decay)
+
+The running state S (hp × ds) lives in VMEM scratch and is carried across
+the innermost (chunk) grid dimension — the same accumulator pattern as
+flash attention.  This removes the (B, nh, nc, L, L) fp32 ``Lmat`` and the
+(B, nc, nh, hp, ds) per-chunk state tensors from HBM entirely: §Roofline
+identified exactly these intermediates as jamba/mamba2's dominant memory
+term in the pure-JAX formulation.
+
+Grid: (B, nh, S/L).  Block shapes are MXU-aligned for L ∈ {128, 256},
+hp ∈ {64, 128}, ds ∈ {16, 128} (the assigned configs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _make_kernel(L: int, hp: int, ds: int):
+    def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref, state_ref):
+        ci = pl.program_id(2)
+        nc = pl.num_programs(2)
+
+        @pl.when(ci == 0)
+        def _init():
+            state_ref[...] = jnp.zeros_like(state_ref)
+
+        x = x_ref[0, :, 0, :].astype(jnp.float32)  # (L, hp)
+        dt = dt_ref[0, :, 0].astype(jnp.float32)  # (L,)
+        A = a_ref[0].astype(jnp.float32)  # scalar (negative)
+        B = b_ref[0].astype(jnp.float32)  # (L, ds)
+        C = c_ref[0].astype(jnp.float32)  # (L, ds)
+
+        a = dt * A  # (L,)
+        a_cum = jnp.cumsum(a)  # inclusive
+        # L[i, j] = exp(a_cum[i] - a_cum[j]) for j <= i, else 0
+        diff = a_cum[:, None] - a_cum[None, :]
+        tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1) <= jax.lax.broadcasted_iota(
+            jnp.int32, (L, L), 0
+        )
+        Lmat = jnp.where(tri, jnp.exp(diff), 0.0)
+
+        xd = x * dt[:, None]  # (L, hp)
+        scores = (C @ B.T) * Lmat  # (L, L)
+        y = scores @ xd  # intra-chunk
+
+        state = state_ref[...]  # (hp, ds)
+        y += jnp.exp(a_cum)[:, None] * (C @ state.T)  # inter-chunk
+
+        total = jnp.exp(a_cum[-1])
+        decay = jnp.exp(a_cum[-1] - a_cum)  # (L,)
+        state_ref[...] = state * total + xd.T @ (B * decay[:, None])
+
+        y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+        @pl.when(ci == nc - 1)
+        def _emit_state():
+            state_out_ref[0, 0] = state_ref[...]
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,  # (B, S, nh, hp)
+    dt: jax.Array,  # (B, S, nh) post-softplus
+    A: jax.Array,  # (nh,) negative
+    Bm: jax.Array,  # (B, S, ds)
+    Cm: jax.Array,  # (B, S, ds)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Returns (y (B,S,nh,hp) fp32, final_state (B,nh,hp,ds) fp32).
+
+    Matches ``repro.kernels.ref.ssd_scan_ref`` / ``models.ssd.ssd_chunked``.
+    """
+    Bsz, S, nh, hp = x.shape
+    ds = Bm.shape[-1]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # pad dt with zeros => a=0, decay 1, no state contribution
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // L
+    grid = (Bsz, nh, nc)
+    y, final_state = pl.pallas_call(
+        _make_kernel(L, hp, ds),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, 1, hp), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, L, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, L, ds), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, L, ds), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, hp), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, hp, ds), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, Sp, nh, hp), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, nh, hp, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hp, ds), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y[:, :S], final_state

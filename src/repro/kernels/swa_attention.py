@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: blockwise (flash) attention with causal and
+sliding-window masking — the sub-quadratic attention used by the dense
+assigned architectures for long-context shapes.
+
+Online-softmax over KV blocks: grid (B*H, S/BQ, S/BK) with the KV axis
+innermost; scratch keeps the running max m, normalizer l, and the (BQ, D)
+fp32 accumulator in VMEM.  Block sizes default to 128 (MXU-aligned).
+Window masking is applied per-block; blocks entirely outside
+(i - window, i] are skipped via a cheap whole-block predicate so the kernel
+does O(S * window) work, not O(S^2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _make_kernel(scale: float, window: int, causal: bool, bq: int, bk: int):
+    def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        iq = pl.program_id(1)
+        jk = pl.program_id(2)
+        nk = pl.num_programs(2)
+
+        @pl.when(jk == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        q_start = iq * bq
+        k_start = jk * bk
+        # whole-block skip predicate: any (q, k) pair in range?
+        live = jnp.asarray(True)
+        if causal:
+            live &= k_start <= q_start + bq - 1  # earliest k <= latest q
+        if window > 0:
+            live &= k_start + bk - 1 > q_start - window  # latest k inside window of earliest q
+
+        @pl.when(live)
+        def _block():
+            q = q_ref[0].astype(jnp.float32) * scale  # (BQ, D)
+            k = k_ref[0].astype(jnp.float32)  # (BK, D)
+            v = v_ref[0].astype(jnp.float32)  # (BK, D)
+            s = q @ k.T  # (BQ, BK)
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = jnp.ones((bq, bk), bool)
+            if causal:
+                mask &= cols <= rows
+            if window > 0:
+                mask &= cols > rows - window
+            s = jnp.where(mask, s, NEG_INF)
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+            p = jnp.exp(s - m_new[:, None])
+            p = jnp.where(mask, p, 0.0)
+            alpha = jnp.exp(m_prev - m_new)
+            l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+            acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+            m_ref[...] = m_new
+
+        @pl.when(jk == nk - 1)
+        def _finalize():
+            l = jnp.maximum(l_ref[...], 1e-30)
+            o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+    return _kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "causal", "block_q", "block_k", "interpret")
+)
+def swa_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int = 0,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q, k, v: (B, H, S, D) -> (B, H, S, D). window=0 => full (causal) attention."""
+    B, H, S, D = q.shape
+    bq, bk = min(block_q, S), min(block_k, S)
+    pad = (-S) % max(bq, bk)
+    if pad:
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    else:
+        qp, kp, vp = q, k, v
+    Sp = S + pad
+    qf = qp.reshape(B * H, Sp, D)
+    kf = kp.reshape(B * H, Sp, D)
+    vf = vp.reshape(B * H, Sp, D)
+    scale = 1.0 / (D**0.5)
+    grid = (B * H, Sp // bq, Sp // bk)
+    out = pl.pallas_call(
+        _make_kernel(scale, window, causal, bq, bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, i, j: (bh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sp, D)[:, :, :S]

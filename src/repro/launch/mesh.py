@@ -1,0 +1,36 @@
+"""Production mesh definitions (TPU v5e target).
+
+Single pod:  (16, 16)    -> axes ("data", "model")   = 256 chips
+Multi-pod:   (2, 16, 16) -> axes ("pod", "data", "model") = 512 chips
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; tests see 1 CPU).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Tiny mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    dp = n // model_parallel
+    return jax.make_mesh((dp, model_parallel), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-sharding axes for this mesh ((pod, data) when multi-pod)."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+# Hardware constants for the roofline model (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link

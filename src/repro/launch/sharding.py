@@ -1,0 +1,158 @@
+"""GSPMD sharding rules for every architecture.
+
+Baseline layout ("fsdp" mode, MaxText-style):
+  * batch dims            -> ("pod","data") / ("data",)
+  * attention/MLP weights -> tensor-parallel on the feature axis over "model",
+                             parameter-sharded ("FSDP") on the other axis over
+                             "data" when divisible;
+  * MoE expert stacks     -> expert-parallel over "model" (leading E axis),
+                             FSDP over "data" on d;
+  * KV caches             -> batch over "data", head_dim over "model";
+  * SSM states            -> batch over "data", ssm heads over "model";
+  * scheduler state (VAoI ages, batteries, feature moments) -> replicated.
+
+"tp" mode drops the FSDP factor (params replicated over "data") — the
+paper-era layout we baseline against in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _div(n: int, mesh, axis: str) -> Optional[str]:
+    """Shard dim of size n over axis only if it divides evenly."""
+    return axis if n % _axis_size(mesh, axis) == 0 else None
+
+
+def data_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_spec(mesh, batch: int, extra_dims: int = 1) -> P:
+    dp = data_axes(mesh)
+    total = 1
+    for a in dp:
+        total *= _axis_size(mesh, a)
+    first = dp if batch % total == 0 else None
+    return P(first, *([None] * extra_dims))
+
+
+def param_pspec(path: str, leaf, mesh, mode: str = "fsdp", embed_mode: str | None = None) -> P:
+    """Sharding rule by parameter name + rank. ``path`` is the '/'-joined
+    key path; leaves may carry a leading stacked-blocks axis (rank+1).
+
+    ``embed_mode`` overrides the embedding/LM-head rule:
+      None / "fsdp" : (V->model, d->data)  — d-dim FSDP (baseline)
+      "vocab_only"  : (V->model, None)     — no contraction-dim sharding, so
+                      the LM-head matmul partitions without a giant
+                      all-reduce of (B,S,V) partials (§Perf iteration 2).
+    """
+    shape = leaf.shape
+    fsdp = mode == "fsdp"
+
+    def d(n):  # data/fsdp factor
+        return _div(n, mesh, "data") if fsdp else None
+
+    def m(n):
+        return _div(n, mesh, "model")
+
+    name = path.split("/")[-1]
+    rank = len(shape)
+
+    # --- embeddings / heads: shard vocab over model, d over data ---
+    if name in ("embed", "lm_head"):
+        if embed_mode == "vocab_only":
+            return P(m(shape[0]), None)
+        return P(m(shape[0]), d(shape[1]))
+    if name in ("pos_embed", "enc_pos_embed"):
+        return P(None, m(shape[1]))
+    # --- norms / scalars ---
+    if "norm" in name or name in ("scale", "bias", "A_log", "dt_bias", "D", "conv_b", "bo"):
+        return P(*([None] * rank))
+    # --- MoE expert stacks: .../moe/w_* (not the shared expert, a plain MLP) ---
+    if "/moe/" in f"/{path}/" and "/shared/" not in f"/{path}/":
+        if name == "router":
+            return P(*([None] * rank))
+        if name in ("w_gate", "w_up", "w_down") and rank >= 3:
+            # (..., E, a, b): expert-parallel over model, FSDP on a
+            lead = [None] * (rank - 3)
+            return P(*lead, m(shape[-3]), d(shape[-2]), None)
+    # --- column-parallel (d -> features) ---
+    if name in ("wq", "wk", "wv", "w_up", "w_gate", "in_proj", "shared_w_up"):
+        lead = [None] * (rank - 2)
+        return P(*lead, d(shape[-2]), m(shape[-1]))
+    if name in ("bq", "bk", "bv"):
+        lead = [None] * (rank - 1)
+        return P(*lead, m(shape[-1]))
+    # --- row-parallel (features -> d) ---
+    if name in ("wo", "w_down", "out_proj"):
+        lead = [None] * (rank - 2)
+        return P(*lead, m(shape[-2]), d(shape[-1]))
+    if name == "conv_w":  # (width, channels)
+        lead = [None] * (rank - 2)
+        return P(*lead, None, m(shape[-1]))
+    return P(*([None] * rank))
+
+
+def params_shardings(params_shape: Any, mesh, mode: str = "fsdp", embed_mode: str | None = None):
+    """NamedSharding tree matching a params (shape) pytree."""
+
+    def one(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        return NamedSharding(mesh, param_pspec(path, leaf, mesh, mode, embed_mode))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def input_shardings(specs: dict, mesh) -> dict:
+    out = {}
+    for k, v in specs.items():
+        b = v.shape[0]
+        out[k] = NamedSharding(mesh, batch_spec(mesh, b, extra_dims=len(v.shape) - 1))
+    return out
+
+
+def cache_pspec(path: str, leaf, mesh, cfg: ModelConfig, batch_only: bool = False) -> P:
+    """Decode caches. Leaves are stacked (n_blocks, B, ...)."""
+    name = path.split("/")[-1]
+    shape = leaf.shape
+    dp = data_axes(mesh)
+    total = 1
+    for a in dp:
+        total *= _axis_size(mesh, a)
+    bdim = dp if shape[1] % total == 0 else None
+    if name in ("k", "v", "ck", "cv"):  # (n_blocks, B, W|S_enc, nkv, hd)
+        if batch_only:  # §Perf it.8: avoid GQA reshard, pay replicated cache
+            return P(None, bdim, None, None, None)
+        kv = _div(shape[3], mesh, "model")
+        hd = _div(shape[4], mesh, "model")
+        if kv and _axis_size(mesh, "model") <= shape[3]:
+            return P(None, bdim, None, kv, None)
+        return P(None, bdim, None, None, hd)
+    if name == "conv":  # (n_blocks, B, w-1, ch)
+        return P(None, bdim, None, _div(shape[3], mesh, "model"))
+    if name == "ssm":  # (n_blocks, B, nh, hp, ds)
+        return P(None, bdim, _div(shape[2], mesh, "model"), None, None)
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(cache_shape: Any, mesh, cfg: ModelConfig, batch_only: bool = False):
+    def one(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        return NamedSharding(mesh, cache_pspec(path, leaf, mesh, cfg, batch_only))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

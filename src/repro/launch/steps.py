@@ -1,0 +1,73 @@
+"""Step functions lowered by the dry-run and used by the at-scale drivers.
+
+train_step : one FL client local SGD step on the LM objective (the paper's
+             BATCHTRAIN at modern scale) — lowered for training shapes.
+prefill    : full-sequence forward, last-position logits (serving prefill).
+serve_step : single-token decode against the KV/SSM cache (decode shapes).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decoder
+from repro.optim import sgd_update
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    lr: float = 0.01,
+    remat: bool = True,
+    unroll: bool = False,
+    ce_impl: str = "gather",
+    ce_chunk: int = 0,
+):
+    def train_step(params, batch: Dict[str, jax.Array]):
+        def loss(p):
+            l, _ = decoder.loss_fn(
+                cfg, p, batch, remat=remat, unroll=unroll, ce_impl=ce_impl, ce_chunk=ce_chunk
+            )
+            return l
+
+        l, grads = jax.value_and_grad(loss)(params)
+        return l, sgd_update(params, grads, lr)
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, unroll: bool = False):
+    def prefill(params, batch: Dict[str, jax.Array]):
+        logits, _ = decoder.forward_logits(
+            cfg,
+            params,
+            batch["tokens"],
+            prefix_embeddings=batch.get("prefix_embeddings"),
+            encoder_frames=batch.get("encoder_frames"),
+            last_only=True,
+            unroll=unroll,
+        )
+        return logits
+
+    return prefill
+
+
+def make_serve_step(
+    cfg: ModelConfig, rolling: bool = False, with_encoder: bool = False, unroll: bool = False
+):
+    if with_encoder:
+        def serve_step(params, cache, tokens, positions, encoder_out):
+            return decoder.decode_step(
+                cfg, params, cache, tokens, positions, rolling=rolling,
+                encoder_out=encoder_out, unroll=unroll,
+            )
+    else:
+        def serve_step(params, cache, tokens, positions):
+            return decoder.decode_step(
+                cfg, params, cache, tokens, positions, rolling=rolling, unroll=unroll
+            )
+
+    return serve_step

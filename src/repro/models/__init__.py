@@ -1,0 +1,1 @@
+from repro.models import attention, cnn, common, decoder, moe, ssd  # noqa: F401

@@ -1,0 +1,225 @@
+"""GQA attention: full/sliding-window training+prefill, KV-cache decode,
+rolling-window cache for long-context decode, and cross-attention (whisper).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, apply_rope, dense_init
+
+
+def init_attn(key: jax.Array, cfg: ModelConfig, dtype, cross: bool = False) -> Params:
+    d, nh, nkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d, nh * hd, dtype),
+        "wk": dense_init(ks[1], d, nkv * hd, dtype),
+        "wv": dense_init(ks[2], d, nkv * hd, dtype),
+        "wo": dense_init(ks[3], nh * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    if cfg.attn_out_bias:
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p: Params, xq: jax.Array, xkv: jax.Array):
+    B = xq.shape[0]
+    nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, xq.shape[1], nh, hd)
+    k = k.reshape(B, xkv.shape[1], nkv, hd)
+    v = v.reshape(B, xkv.shape[1], nkv, hd)
+    return q, k, v
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q (B,Sq,nh,hd), k (B,Sk,nkv,hd) -> scores (B,nh,Sq,Sk) with GQA grouping."""
+    B, Sq, nh, hd = q.shape
+    nkv = k.shape[2]
+    g = nh // nkv
+    qg = q.reshape(B, Sq, nkv, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+    return s.reshape(B, nh, Sq, k.shape[1])
+
+
+def _gqa_out(attn: jax.Array, v: jax.Array) -> jax.Array:
+    """attn (B,nh,Sq,Sk), v (B,Sk,nkv,hd) -> (B,Sq,nh*hd)."""
+    B, nh, Sq, Sk = attn.shape
+    nkv, hd = v.shape[2], v.shape[3]
+    g = nh // nkv
+    a = attn.reshape(B, nkv, g, Sq, Sk)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", a, v)
+    return o.reshape(B, Sq, nh * hd)
+
+
+# q-chunked attention kicks in above this sequence length: the (S, S) score
+# matrix is never materialized; each scan step holds only (B, nh, CQ, S).
+CHUNK_THRESHOLD = 1024
+Q_CHUNK = 512
+
+
+def _masked_softmax_attn(
+    q: jax.Array, k: jax.Array, v: jax.Array, q_offset, causal: bool, window: int
+) -> jax.Array:
+    """q: (B,Cq,nh,hd); k,v: (B,Sk,nkv,hd). Rows are absolute position
+    q_offset + arange(Cq). Returns (B, Cq, nh*hd)."""
+    scores = _gqa_scores(q, k).astype(jnp.float32)
+    Cq, Sk = scores.shape[-2], scores.shape[-1]
+    if causal:
+        iq = q_offset + jnp.arange(Cq)[:, None]
+        jk = jnp.arange(Sk)[None, :]
+        mask = jk <= iq
+        if window > 0:
+            mask &= jk > iq - window
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return _gqa_out(attn, v)
+
+
+def attn_forward(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    encoder_out: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    x: (B, S, d). positions: (S,) or (B, S). window>0 => sliding-window causal.
+    encoder_out: if given, cross-attention (no causal mask, no rope on kv).
+    """
+    xkv = encoder_out if encoder_out is not None else x
+    q, k, v = _project_qkv(cfg, p, x, xkv)
+    if cfg.use_rope and encoder_out is None:
+        pos_b = positions if positions.ndim == 2 else positions[None, :]
+        q = apply_rope(q, pos_b, cfg.rope_theta)
+        k = apply_rope(k, pos_b, cfg.rope_theta)
+    S = q.shape[1]
+    is_causal = causal and encoder_out is None
+    if S > CHUNK_THRESHOLD and S % Q_CHUNK == 0:
+        # scan over q chunks; never materialize the (S, S) score matrix
+        B, _, nh, hd = q.shape
+        nchunks = S // Q_CHUNK
+        qc = q.reshape(B, nchunks, Q_CHUNK, nh, hd).transpose(1, 0, 2, 3, 4)
+
+        def chunk_fn(i, qi):
+            return _masked_softmax_attn(qi, k, v, i * Q_CHUNK, is_causal, window)
+
+        oc = jax.lax.map(lambda args: chunk_fn(*args), (jnp.arange(nchunks), qc))
+        out = oc.transpose(1, 0, 2, 3).reshape(B, S, nh * hd)
+    else:
+        out = _masked_softmax_attn(q, k, v, 0, is_causal, window)
+    out = out @ p["wo"]
+    if cfg.attn_out_bias:
+        out = out + p["bo"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def cross_kv(cfg: ModelConfig, p: Params, encoder_out: jax.Array):
+    """Project the encoder output to cross-attention K/V once (prefill); decode
+    then reads the cache instead of re-projecting 1500 frames per token."""
+    B, S = encoder_out.shape[:2]
+    nkv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = encoder_out @ p["wk"]
+    v = encoder_out @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k.reshape(B, S, nkv, hd), v.reshape(B, S, nkv, hd)
+
+
+def cross_decode_cached(cfg: ModelConfig, p: Params, x: jax.Array, ck: jax.Array, cv: jax.Array) -> jax.Array:
+    """One-token cross-attention against cached K/V. x: (B,1,d)."""
+    B = x.shape[0]
+    nh, hd = cfg.num_heads, cfg.head_dim
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, 1, nh, hd)
+    scores = _gqa_scores(q, ck).astype(jnp.float32)
+    attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(attn, cv) @ p["wo"]
+    if cfg.attn_out_bias:
+        out = out + p["bo"]
+    return out
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> Dict[str, jax.Array]:
+    nkv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, length, nkv, hd), dtype),
+        "v": jnp.zeros((batch, length, nkv, hd), dtype),
+    }
+
+
+def attn_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    positions: jax.Array,
+    rolling: bool = False,
+    encoder_out: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: (B, 1, d); positions: (B,) absolute position of the
+    new token. ``rolling=True`` treats the cache as a circular buffer of width
+    W (sub-quadratic long-context decode); otherwise it is a linear cache of
+    capacity >= positions+1.  Cross-attention (encoder_out given) reads a
+    static encoder KV (computed here; cache unused for brevity of the API).
+    """
+    B = x.shape[0]
+    if encoder_out is not None:
+        q, k, v = _project_qkv(cfg, p, x, encoder_out)
+        scores = _gqa_scores(q, k).astype(jnp.float32)
+        attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = _gqa_out(attn, v) @ p["wo"]
+        if cfg.attn_out_bias:
+            out = out + p["bo"]
+        return out, cache
+
+    q, k, v = _project_qkv(cfg, p, x, x)  # (B,1,*,hd)
+    if cfg.use_rope:
+        q = apply_rope(q, positions[:, None], cfg.rope_theta)
+        k = apply_rope(k, positions[:, None], cfg.rope_theta)
+    W = cache["k"].shape[1]
+    slot = (positions % W) if rolling else jnp.minimum(positions, W - 1)
+
+    def write(buf, new):
+        idx = slot[:, None, None, None]
+        onehot = jax.nn.one_hot(slot, W, dtype=buf.dtype)  # (B, W)
+        return buf * (1 - onehot[:, :, None, None]) + new * onehot[:, :, None, None]
+
+    ck = write(cache["k"], k)
+    cv = write(cache["v"], v)
+    scores = _gqa_scores(q, ck).astype(jnp.float32)  # (B, nh, 1, W)
+    slots = jnp.arange(W)[None, :]  # (1, W)
+    if rolling:
+        # slot j holds absolute position p_j = pos - ((pos - j) mod W); valid if p_j >= 0
+        pj = positions[:, None] - jnp.mod(positions[:, None] - slots, W)
+        valid = pj >= 0
+    else:
+        valid = slots <= positions[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(attn, cv) @ p["wo"]
+    if cfg.attn_out_bias:
+        out = out + p["bo"]
+    return out, {"k": ck, "v": cv}

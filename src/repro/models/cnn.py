@@ -1,0 +1,87 @@
+"""The paper's client model (§V): 6 conv layers, 3 max-pools, 3 FC layers.
+
+Pure-functional JAX; used by the EHFL simulator with *stacked* per-client
+parameters (vmap over the client axis).  ``feature_vector`` taps the output
+layer (10 logits -> softmax), exactly the paper's lightweight VAoI proxy
+("representations from the output layer ... 10 elements").
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cifar_cnn import CNNConfig
+from repro.models.common import Params, softmax_cross_entropy
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    scale = 1.0 / jnp.sqrt(kh * kw * cin)
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * scale
+
+
+def init_params(cfg: CNNConfig, key: jax.Array) -> Params:
+    p: Params = {}
+    cin = cfg.in_channels
+    ks = jax.random.split(key, len(cfg.conv_channels) + len(cfg.fc_dims) + 1)
+    for i, cout in enumerate(cfg.conv_channels):
+        p[f"conv{i}_w"] = _conv_init(ks[i], 3, 3, cin, cout)
+        p[f"conv{i}_b"] = jnp.zeros((cout,), jnp.float32)
+        cin = cout
+    spatial = cfg.image_size // 8  # three 2x2 max-pools
+    d = spatial * spatial * cfg.conv_channels[-1]
+    dims = (d,) + cfg.fc_dims + (cfg.num_classes,)
+    for i in range(len(dims) - 1):
+        k = ks[len(cfg.conv_channels) + i]
+        p[f"fc{i}_w"] = jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32) / jnp.sqrt(dims[i])
+        p[f"fc{i}_b"] = jnp.zeros((dims[i + 1],), jnp.float32)
+    return p
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def forward(cfg: CNNConfig, p: Params, images: jax.Array) -> jax.Array:
+    """images: (B, H, W, C) -> logits (B, num_classes)."""
+    x = images
+    for i in range(len(cfg.conv_channels)):
+        x = jax.lax.conv_general_dilated(
+            x, p[f"conv{i}_w"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        ) + p[f"conv{i}_b"]
+        x = jax.nn.relu(x)
+        if i % 2 == 1:  # pool after every second conv -> 3 pools
+            x = _maxpool(x)
+    x = x.reshape(x.shape[0], -1)
+    n_fc = len(cfg.fc_dims) + 1
+    for i in range(n_fc):
+        x = x @ p[f"fc{i}_w"] + p[f"fc{i}_b"]
+        if i < n_fc - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def loss_fn(cfg: CNNConfig, p: Params, images: jax.Array, labels: jax.Array) -> jax.Array:
+    return softmax_cross_entropy(forward(cfg, p, images), labels)
+
+
+def feature_vector(cfg: CNNConfig, p: Params, images: jax.Array) -> jax.Array:
+    """Paper's proxy feature: mean softmax output over the batch (Eq. 5/6)."""
+    probs = jax.nn.softmax(forward(cfg, p, images).astype(jnp.float32), axis=-1)
+    return jnp.mean(probs, axis=0)
+
+
+def predictions(cfg: CNNConfig, p: Params, images: jax.Array) -> jax.Array:
+    return jnp.argmax(forward(cfg, p, images), axis=-1)
+
+
+def macro_f1(preds: jax.Array, labels: jax.Array, num_classes: int) -> jax.Array:
+    """Macro-averaged F1 (the paper's learning metric)."""
+    f1s = []
+    for c in range(num_classes):
+        tp = jnp.sum((preds == c) & (labels == c))
+        fp = jnp.sum((preds == c) & (labels != c))
+        fn = jnp.sum((preds != c) & (labels == c))
+        f1s.append(2 * tp / jnp.maximum(2 * tp + fp + fn, 1))
+    return jnp.mean(jnp.stack(f1s))

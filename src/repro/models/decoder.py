@@ -1,0 +1,492 @@
+"""Unified model assembly for all assigned architectures.
+
+One decoder stack covers dense / MoE / SSM / hybrid / VLM-backbone; whisper
+adds an encoder stack + cross-attention.  Layers are grouped into
+super-blocks of ``cfg.block_period`` so heterogeneous interleaves (jamba)
+still scan with stacked parameters.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssd as ssd_lib
+from repro.models.common import (
+    Params,
+    apply_mlp,
+    apply_norm,
+    embed_init,
+    init_mlp,
+    init_norm,
+    softmax_cross_entropy,
+    softmax_cross_entropy_per_token,
+)
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (set by the launcher; None on single host).
+# GSPMD's solver, left alone with FSDP-sharded weights, propagates the d-dim
+# sharding INTO the activations and replicates the batch — every layer then
+# all-reduces (B_full, S, d) partials (EXPERIMENTS.md §Perf iteration 3).
+# Pinning activations to batch-sharded layout forces the intended
+# weight-gather FSDP semantics instead.
+# ---------------------------------------------------------------------------
+
+_ACT_SHARDING = None  # NamedSharding for (B, S, d) activations
+_LOGITS_SHARDING = None  # NamedSharding for (B, S, V) logits
+
+
+def set_activation_shardings(act=None, logits=None) -> None:
+    global _ACT_SHARDING, _LOGITS_SHARDING
+    _ACT_SHARDING = act
+    _LOGITS_SHARDING = logits
+
+
+def _constrain(x: jax.Array, which: str = "act") -> jax.Array:
+    ns = _ACT_SHARDING if which == "act" else _LOGITS_SHARDING
+    if ns is not None and x.ndim == 3:
+        return jax.lax.with_sharding_constraint(x, ns)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key: jax.Array, cfg: ModelConfig, i: int, dtype, cross: bool = False) -> Params:
+    kind = cfg.layer_kind(i)
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": init_norm(cfg.norm, cfg.d_model, dtype)}
+    if kind == "attn":
+        p["attn"] = attn_lib.init_attn(ks[0], cfg, dtype)
+    else:
+        p["ssm"] = ssd_lib.init_ssd(ks[0], cfg, dtype)
+    if cross:
+        p["norm_cross"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        p["cross"] = attn_lib.init_attn(ks[2], cfg, dtype, cross=True)
+    if cfg.d_ff > 0:
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        if cfg.layer_moe(i):
+            p["moe"] = moe_lib.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _stack_blocks(cfg: ModelConfig, key: jax.Array, dtype, cross: bool = False):
+    """Returns a tuple (len=block_period) of pytrees, leaves stacked over n_blocks."""
+    period = cfg.block_period
+    L = cfg.num_layers
+    assert L % period == 0, (cfg.name, L, period)
+    n_blocks = L // period
+    keys = jax.random.split(key, L).reshape(n_blocks, period, -1)
+    positions = []
+    for j in range(period):
+        per_block = [_init_layer(keys[b, j], cfg, b * period + j, dtype, cross) for b in range(n_blocks)]
+        positions.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_block))
+    return tuple(positions)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, max_seq: int = 4096) -> Params:
+    dtype = cfg.dtype
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+        "blocks": _stack_blocks(cfg, ks[1], dtype, cross=cfg.is_encoder_decoder),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(ks[2], cfg.vocab_size, cfg.d_model, dtype)
+    needs_pos = (not cfg.use_rope) and cfg.layer_kind(0) != "ssm" and any(
+        cfg.layer_kind(i) == "attn" for i in range(cfg.num_layers)
+    )
+    if cfg.is_encoder_decoder or (needs_pos and cfg.family != "hybrid"):
+        # learned absolute positions (whisper); jamba uses none at all
+        if cfg.is_encoder_decoder:
+            p["pos_embed"] = embed_init(ks[3], max_seq, cfg.d_model, dtype)
+        else:
+            p["pos_embed"] = embed_init(ks[3], max_seq, cfg.d_model, dtype)
+    if cfg.is_encoder_decoder:
+        enc_cfg = cfg  # same dims
+        import dataclasses
+
+        enc_stack_cfg = dataclasses.replace(cfg, num_layers=cfg.num_encoder_layers, num_experts=0)
+        p["enc_blocks"] = _stack_blocks(enc_stack_cfg, ks[4], dtype, cross=False)
+        p["enc_pos_embed"] = embed_init(ks[5], cfg.encoder_seq, cfg.d_model, dtype)
+        p["enc_final_norm"] = init_norm(cfg.norm, cfg.d_model, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer_fwd(
+    cfg: ModelConfig,
+    p: Params,
+    i_in_block: int,
+    x: jax.Array,
+    positions: jax.Array,
+    window: int,
+    causal: bool,
+    encoder_out: Optional[jax.Array],
+) -> Tuple[jax.Array, jax.Array]:
+    kind = cfg.layer_kind(i_in_block)
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg.norm, p["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        a = attn_lib.attn_forward(cfg, p["attn"], h, positions, causal=causal, window=window)
+    else:
+        a = ssd_lib.ssd_forward(cfg, p["ssm"], h)
+    x = x + a
+    if encoder_out is not None and "cross" in p:
+        h = apply_norm(cfg.norm, p["norm_cross"], x, cfg.norm_eps)
+        x = x + attn_lib.attn_forward(cfg, p["cross"], h, positions, encoder_out=encoder_out)
+    if cfg.d_ff > 0:
+        h = apply_norm(cfg.norm, p["norm2"], x, cfg.norm_eps)
+        if cfg.layer_moe(i_in_block):
+            f, aux = moe_lib.apply_moe(cfg, p["moe"], h)
+        else:
+            f = apply_mlp(p["mlp"], h, cfg.act)
+        x = x + f
+    return x, aux
+
+
+def _run_stack(
+    cfg: ModelConfig,
+    blocks,
+    x: jax.Array,
+    positions: jax.Array,
+    window: int,
+    causal: bool,
+    encoder_out: Optional[jax.Array] = None,
+    remat: bool = False,
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    period = len(blocks)
+
+    def body(carry, block_params):
+        x, aux = carry
+        for j in range(period):
+            x, a = _apply_layer_fwd(cfg, block_params[j], j, x, positions, window, causal, encoder_out)
+            x = _constrain(x)
+            aux = aux + a
+        return (x, aux), None
+
+    if remat:  # activation checkpointing at super-block granularity
+        body = jax.checkpoint(body)
+    carry = (x, jnp.zeros((), jnp.float32))
+    if unroll:
+        # python loop — identical math; used by the dry-run so that XLA
+        # cost_analysis sees every layer (while-loop bodies are counted once)
+        n_blocks = jax.tree.leaves(blocks)[0].shape[0]
+        for b in range(n_blocks):
+            blk = jax.tree.map(lambda l: l[b], blocks)
+            carry, _ = body(carry, blk)
+        return carry
+    (x, aux), _ = jax.lax.scan(body, carry, blocks)
+    return x, aux
+
+
+def _encode(cfg: ModelConfig, params: Params, frames: jax.Array, unroll: bool = False) -> jax.Array:
+    """Whisper encoder over stubbed conv-frontend frames (B, S_enc, d)."""
+    S = frames.shape[1]
+    x = frames + params["enc_pos_embed"][None, :S, :]
+    pos = jnp.arange(S)
+    x, _ = _run_stack(cfg, params["enc_blocks"], x, pos, window=0, causal=False, unroll=unroll)
+    return apply_norm(cfg.norm, params["enc_final_norm"], x, cfg.norm_eps)
+
+
+def forward_logits(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    prefix_embeddings: Optional[jax.Array] = None,
+    encoder_frames: Optional[jax.Array] = None,
+    window: int = 0,
+    remat: bool = False,
+    last_only: bool = False,
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits over token positions (B, S, V), moe aux loss).
+
+    ``last_only=True`` (serving prefill) computes logits for the final
+    position only — a (B, S, V) logits tensor at 32k prefill would dwarf the
+    activations."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    P = 0
+    if prefix_embeddings is not None:
+        P = prefix_embeddings.shape[1]
+        x = jnp.concatenate([prefix_embeddings.astype(cfg.dtype), x], axis=1)
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][None, : S + P, :].astype(cfg.dtype)
+    x = _constrain(x)
+    positions = jnp.arange(S + P)
+    encoder_out = None
+    if cfg.is_encoder_decoder:
+        assert encoder_frames is not None
+        encoder_out = _encode(cfg, params, encoder_frames, unroll=unroll)
+    eff_window = window if window > 0 else cfg.sliding_window
+    x, aux = _run_stack(
+        cfg, params["blocks"], x, positions, eff_window, True, encoder_out, remat, unroll
+    )
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    if P:
+        x = x[:, P:, :]
+    if last_only:
+        x = x[:, -1:, :]
+    x = _constrain(x)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = _constrain(x @ head.T.astype(cfg.dtype), "logits")
+    return logits, aux
+
+
+def forward_hidden(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    prefix_embeddings: Optional[jax.Array] = None,
+    encoder_frames: Optional[jax.Array] = None,
+    remat: bool = False,
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Final-norm hidden states (B, S_tokens, d) + moe aux — the pre-head
+    tensor used by the chunked-CE loss (§Perf iteration 6)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    P = 0
+    if prefix_embeddings is not None:
+        P = prefix_embeddings.shape[1]
+        x = jnp.concatenate([prefix_embeddings.astype(cfg.dtype), x], axis=1)
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][None, : S + P, :].astype(cfg.dtype)
+    x = _constrain(x)
+    positions = jnp.arange(S + P)
+    encoder_out = None
+    if cfg.is_encoder_decoder:
+        assert encoder_frames is not None
+        encoder_out = _encode(cfg, params, encoder_frames, unroll=unroll)
+    eff_window = cfg.sliding_window
+    x, aux = _run_stack(
+        cfg, params["blocks"], x, positions, eff_window, True, encoder_out, remat, unroll
+    )
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    if P:
+        x = x[:, P:, :]
+    return _constrain(x), aux
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: Params,
+    batch: Dict[str, jax.Array],
+    aux_weight: float = 0.01,
+    remat: bool = False,
+    unroll: bool = False,
+    ce_impl: str = "gather",
+    ce_chunk: int = 0,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """``ce_chunk > 0``: the LM head + CE are evaluated in rematted sequence
+    chunks so the (B, S, V) logits (and their fp32 shadows) never exist in
+    full — per-chunk logits are recomputed in the backward pass."""
+    if ce_chunk > 0:
+        x, aux = forward_hidden(
+            cfg,
+            params,
+            batch["tokens"],
+            prefix_embeddings=batch.get("prefix_embeddings"),
+            encoder_frames=batch.get("encoder_frames"),
+            remat=remat,
+            unroll=unroll,
+        )
+        head = (params["embed"] if cfg.tie_embeddings else params["lm_head"]).T.astype(cfg.dtype)
+        xs = x[:, :-1]
+        ls = batch["labels"][:, 1:]
+        B, Sm1, d = xs.shape
+        C = ce_chunk
+        pad = (-Sm1) % C
+        if pad:  # pad with a repeat of the last column, weight it zero
+            xs = jnp.concatenate([xs, jnp.repeat(xs[:, -1:], pad, 1)], axis=1)
+            ls = jnp.concatenate([ls, jnp.repeat(ls[:, -1:], pad, 1)], axis=1)
+        w = jnp.concatenate([jnp.ones((Sm1,)), jnp.zeros((pad,))])
+        nch = (Sm1 + pad) // C
+        xc = xs.reshape(B, nch, C, d).transpose(1, 0, 2, 3)
+        lc = ls.reshape(B, nch, C).transpose(1, 0, 2)
+        wc = w.reshape(nch, C)
+
+        @jax.checkpoint
+        def chunk_ce(args):
+            xi, li, wi = args
+            logits = _constrain(xi @ head, "logits")
+            per_tok = softmax_cross_entropy_per_token(logits, li, impl=ce_impl)
+            return jnp.sum(per_tok * wi[None, :])
+
+        if unroll:  # analysis-grade: every chunk visible to cost_analysis
+            ce_sum = jnp.zeros((), jnp.float32)
+            for i in range(nch):
+                ce_sum = ce_sum + chunk_ce((xc[i], lc[i], wc[i]))
+            ce = ce_sum / (B * Sm1)
+        else:
+            totals = jax.lax.map(chunk_ce, (xc, lc, wc))
+            ce = jnp.sum(totals) / (B * Sm1)
+        loss = ce + aux_weight * aux
+        return loss, {"ce": ce, "moe_aux": aux}
+    logits, aux = forward_logits(
+        cfg,
+        params,
+        batch["tokens"],
+        prefix_embeddings=batch.get("prefix_embeddings"),
+        encoder_frames=batch.get("encoder_frames"),
+        remat=remat,
+        unroll=unroll,
+    )
+    ce = softmax_cross_entropy(logits[:, :-1], batch["labels"][:, 1:], impl=ce_impl)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Feature tap (the paper's proxy, at modern scale)
+# ---------------------------------------------------------------------------
+
+
+def feature_vector(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    prefix_embeddings: Optional[jax.Array] = None,
+    encoder_frames: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Mean-pooled final hidden state over a small batch — the intermediate-
+    layer feature vector z of Eq. (5)/(6), one forward pass, no backward."""
+    logits, _ = forward_logits(cfg, params, tokens, prefix_embeddings, encoder_frames)
+    # The paper taps the output layer (10-dim for CIFAR). For LMs we tap the
+    # softmax-normalized output distribution averaged over positions+batch.
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.mean(probs, axis=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, length: int, rolling: bool = False, cross_cache: bool = False
+) -> Tuple:
+    """Per-block-position caches, leaves stacked over n_blocks. ``length`` is
+    the KV capacity (the rolling window width when rolling=True).
+    ``cross_cache=True`` (enc-dec) adds ck/cv planes for prefill_cross_cache."""
+    period = cfg.block_period
+    n_blocks = cfg.num_layers // period
+    dtype = cfg.dtype
+    caches = []
+    for j in range(period):
+        kind = cfg.layer_kind(j)
+        if kind == "attn":
+            W = min(length, cfg.sliding_window) if (cfg.sliding_window and not rolling) else length
+            one = attn_lib.init_kv_cache(cfg, batch, W, dtype)
+        else:
+            one = ssd_lib.init_ssd_cache(cfg, batch, dtype)
+        if cfg.is_encoder_decoder and cross_cache:
+            # cross-attention K/V cached once at prefill (beyond-paper
+            # serving optimization — EXPERIMENTS.md §Perf iteration 7)
+            nkv, hd = cfg.num_kv_heads, cfg.head_dim
+            one = dict(one)
+            one["ck"] = jnp.zeros((batch, cfg.encoder_seq, nkv, hd), dtype)
+            one["cv"] = jnp.zeros((batch, cfg.encoder_seq, nkv, hd), dtype)
+        caches.append(jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n_blocks,) + x.shape), one))
+    return tuple(caches)
+
+
+def prefill_cross_cache(cfg: ModelConfig, params: Params, cache: Tuple, encoder_out: jax.Array) -> Tuple:
+    """Fill the cross-attention K/V planes of a fresh cache from the encoder
+    output (once per request, before decoding)."""
+    assert cfg.is_encoder_decoder
+    period = len(params["blocks"])
+    new = []
+    for j in range(period):
+
+        def fill(block_p, block_c):
+            ck, cv = attn_lib.cross_kv(cfg, block_p["cross"], encoder_out)
+            c = dict(block_c)
+            c["ck"], c["cv"] = ck, cv
+            return c
+
+        new.append(jax.vmap(fill)(params["blocks"][j], cache[j]))
+    return tuple(new)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    cache: Tuple,
+    tokens: jax.Array,
+    positions: jax.Array,
+    rolling: bool = False,
+    encoder_out: Optional[jax.Array] = None,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Tuple]:
+    """One-token decode. tokens (B,1), positions (B,) -> (logits (B,1,V), cache)."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][positions][:, None, :].astype(cfg.dtype)
+    period = len(params["blocks"])
+
+    def body(x, scanned):
+        block_params, block_cache = scanned
+        new_cache = []
+        for j in range(period):
+            p = block_params[j]
+            c = block_cache[j]
+            kind = cfg.layer_kind(j)
+            h = apply_norm(cfg.norm, p["norm1"], x, cfg.norm_eps)
+            cross_planes = {k_: c[k_] for k_ in ("ck", "cv") if k_ in c}
+            if kind == "attn":
+                roll = rolling or (cfg.sliding_window > 0)
+                a, c = attn_lib.attn_decode(cfg, p["attn"], h, c, positions, rolling=roll)
+            else:
+                a, c = ssd_lib.ssd_decode(cfg, p["ssm"], h, c)
+            if cross_planes:  # keep the (static) cross K/V planes in the carry
+                c = {**c, **cross_planes}
+            x = x + a
+            if "cross" in p and (encoder_out is not None or "ck" in c):
+                h = apply_norm(cfg.norm, p["norm_cross"], x, cfg.norm_eps)
+                if "ck" in c:  # cached cross K/V (no per-token re-projection)
+                    ca = attn_lib.cross_decode_cached(cfg, p["cross"], h, c["ck"], c["cv"])
+                else:
+                    ca, _ = attn_lib.attn_decode(cfg, p["cross"], h, c, positions, encoder_out=encoder_out)
+                x = x + ca
+            if cfg.d_ff > 0:
+                h = apply_norm(cfg.norm, p["norm2"], x, cfg.norm_eps)
+                if cfg.layer_moe(j):
+                    f, _ = moe_lib.apply_moe(cfg, p["moe"], h)
+                else:
+                    f = apply_mlp(p["mlp"], h, cfg.act)
+                x = x + f
+            new_cache.append(c)
+        return x, tuple(new_cache)
+
+    if unroll:
+        n_blocks = jax.tree.leaves(cache)[0].shape[0]
+        ys = []
+        for b in range(n_blocks):
+            blk = jax.tree.map(lambda l: l[b], params["blocks"])
+            cb = jax.tree.map(lambda l: l[b], cache)
+            x, cb_new = body(x, (blk, cb))
+            ys.append(cb_new)
+        new_cache = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    else:
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.T.astype(cfg.dtype)
+    return logits, new_cache

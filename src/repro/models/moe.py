@@ -1,0 +1,81 @@
+"""Mixture-of-Experts FFN: shared + routed experts, capacity-based einsum
+dispatch (MaxText-style).  Experts are stacked on a leading E axis that the
+launcher shards over the ``model`` mesh axis — GSPMD then emits the
+all-to-all for dispatch/combine.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, dense_init, init_mlp, apply_mlp
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, dtype) -> Params:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p: Params = {
+        "router": dense_init(ks[0], d, E, jnp.float32),  # router kept fp32
+        "w_gate": (jax.random.normal(ks[1], (E, d, ff), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, ff), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, ff, d), jnp.float32) / math.sqrt(ff)).astype(dtype),
+    }
+    if cfg.num_shared_experts > 0:
+        p["shared"] = init_mlp(ks[4], d, ff * cfg.num_shared_experts, "silu", dtype)
+    return p
+
+
+def apply_moe(
+    cfg: ModelConfig, p: Params, x: jax.Array, group_size: int = 512
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss). Capacity-dropped top-k routing.
+
+    Tokens are routed in groups of ``group_size`` along the sequence axis so
+    the dispatch/combine one-hots stay O(tokens * k * G * cf) instead of
+    O(tokens * k * S * cf) — essential at long sequence lengths.  Capacity is
+    enforced per (batch row, group).
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    G = min(group_size, S)
+    if S % G:  # fall back to one group (small/odd sequences)
+        G = S
+    ng = S // G
+    C = max(1, int(math.ceil(k * G / E * cfg.capacity_factor)))
+    C = min(C, G)
+
+    xg = x.reshape(B, ng, G, d)
+    logits = xg.astype(jnp.float32) @ p["router"]  # (B,ng,G,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)  # (B,ng,G,k)
+    top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)  # renormalize
+    sel = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)  # (B,ng,G,k,E)
+    mask = jnp.sum(sel, axis=-2)  # (B,ng,G,E) in {0,1}
+    gates = jnp.sum(sel * top_vals[..., None], axis=-2)  # (B,ng,G,E)
+
+    # load-balance aux loss (Switch-style)
+    density = jnp.mean(mask, axis=2)  # (B,ng,E)
+    density_proxy = jnp.mean(probs, axis=2)
+    aux = jnp.mean(density * density_proxy) * (E * E) / k
+
+    # capacity assignment within each group
+    pos_in_exp = jnp.cumsum(mask, axis=2) * mask - 1.0  # (B,ng,G,E)
+    keep = (pos_in_exp >= 0) & (pos_in_exp < C)
+    slot = jnp.where(keep, pos_in_exp, 0).astype(jnp.int32)
+    dispatch = jax.nn.one_hot(slot, C, dtype=x.dtype) * keep[..., None].astype(x.dtype)  # (B,ng,G,E,C)
+    combine = dispatch * gates[..., None].astype(x.dtype)
+
+    xe = jnp.einsum("bgtec,bgtd->begcd", dispatch, xg)  # (B,E,ng,C,d)
+    h = jax.nn.silu(jnp.einsum("begcd,edf->begcf", xe, p["w_gate"]))
+    h = h * jnp.einsum("begcd,edf->begcf", xe, p["w_up"])
+    ye = jnp.einsum("begcf,efd->begcd", h, p["w_down"])  # (B,E,ng,C,d)
+    y = jnp.einsum("bgtec,begcd->bgtd", combine, ye).reshape(B, S, d)
+
+    if cfg.num_shared_experts > 0:
+        y = y + apply_mlp(p["shared"], x, "silu")
+    return y, aux

@@ -1,0 +1,205 @@
+"""Mamba2 block via SSD (state-space duality, arXiv:2405.21060).
+
+TPU-native formulation: the sequence is processed in chunks — intra-chunk
+work is dense matmuls (MXU-friendly), inter-chunk state carry is a
+``lax.associative_scan`` over chunk summaries.  Decode is the O(1) recurrent
+state update.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, dense_init
+
+
+def init_ssd(key: jax.Array, cfg: ModelConfig, dtype) -> Params:
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * ds
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z (di), x (di), B (ds), C (ds), dt (nh)]
+    p: Params = {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * ds + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+    return p
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * ds]
+    dt = zxbcdt[..., 2 * di + 2 * ds :]
+    return z, xBC, dt
+
+
+def _gated_norm(p: Params, y: jax.Array, z: jax.Array, eps: float) -> jax.Array:
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * p["norm_scale"].astype(jnp.float32)).astype(y.dtype)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., L). Returns S with S[..., i, j] = sum_{j<m<=i} a[..., m] (lower-tri), -inf above diag."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., i, j) = sum_{j<m<=i}
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, nh, hp)
+    dt: jax.Array,  # (B, S, nh) post-softplus
+    A: jax.Array,  # (nh,) negative
+    Bm: jax.Array,  # (B, S, ds)
+    Cm: jax.Array,  # (B, S, ds)
+    chunk: int,
+    init_state: jax.Array | None = None,  # (B, nh, hp, ds)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,nh,hp), final_state (B,nh,hp,ds))."""
+    B_, S, nh, hp = x.shape
+    ds = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc, L = Sp // chunk, chunk
+
+    xd = (x * dt[..., None]).astype(jnp.float32)  # (B,Sp,nh,hp)
+    a = (dt * A[None, None, :]).astype(jnp.float32)  # (B,Sp,nh) negative increments
+
+    # chunked views
+    xc = xd.reshape(B_, nc, L, nh, hp)
+    ac = a.reshape(B_, nc, L, nh).transpose(0, 3, 1, 2)  # (B,nh,nc,L)
+    Bc = Bm.reshape(B_, nc, L, ds).astype(jnp.float32)
+    Cc = Cm.reshape(B_, nc, L, ds).astype(jnp.float32)
+
+    a_cum = jnp.cumsum(ac, axis=-1)  # (B,nh,nc,L)
+
+    # 1) intra-chunk (diagonal blocks): quadratic within chunk — dense matmuls
+    Lmat = jnp.exp(_segsum(ac))  # (B,nh,nc,L,L)
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, Lmat, xc)
+
+    # 2) chunk summaries: end-state contribution of each chunk
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (B,nh,nc,L)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xc)  # (B,nc,nh,hp,ds)
+
+    # 3) inter-chunk recurrence: S_c = S_{c-1} * exp(sum a_c) + states_c
+    chunk_decay = jnp.exp(a_cum[..., -1])  # (B,nh,nc)
+
+    def combine(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    dec = chunk_decay.transpose(0, 2, 1)  # (B,nc,nh)
+    if init_state is None:
+        init_state = jnp.zeros((B_, nh, hp, ds), jnp.float32)
+    else:
+        init_state = init_state.astype(jnp.float32)
+    run_dec, run_state = jax.lax.associative_scan(combine, (dec, states), axis=1)
+    # state entering chunk c = run_state[c-1] + (prod of decays before c) * S0
+    cum_dec_in = jnp.concatenate([jnp.ones_like(dec[:, :1]), run_dec[:, :-1]], axis=1)
+    prev_states = (
+        jnp.concatenate([jnp.zeros_like(run_state[:, :1]), run_state[:, :-1]], axis=1)
+        + cum_dec_in[..., None, None] * init_state[:, None]
+    )
+    final_state = run_state[:, -1] + run_dec[:, -1][..., None, None] * init_state
+
+    state_decay_out = jnp.exp(a_cum)  # (B,nh,nc,L)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(B_, Sp, nh, hp)[:, :S]
+    return y, final_state
+
+
+def ssd_forward(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    state: Dict[str, jax.Array] | None = None,
+    use_kernel: bool = False,
+) -> jax.Array:
+    """Full-sequence mamba2 block. x: (B, S, d) -> (B, S, d).
+
+    ``use_kernel=True`` routes the scan through the fused Pallas
+    ``ssd_scan`` kernel (TPU; interpret mode on CPU) instead of the
+    pure-jnp chunked form — identical math, VMEM-resident intermediates."""
+    B, S, d = x.shape
+    di, ds, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    # causal depthwise conv, width w
+    w = cfg.ssm_conv_width
+    xBC_pad = jnp.pad(xBC, ((0, 0), (w - 1, 0), (0, 0)))
+    conv = sum(xBC_pad[:, i : i + S, :] * p["conv_w"][i][None, None, :] for i in range(w))
+    xBC = jax.nn.silu(conv + p["conv_b"])
+    xs = xBC[..., :di].reshape(B, S, nh, hp)
+    Bm, Cm = xBC[..., di : di + ds], xBC[..., di + ds :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])  # (nh,)
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        y, _ = kops.ssd_scan(xs, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    else:
+        y, _ = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent O(1) step)
+# ---------------------------------------------------------------------------
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    di, ds = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, di + 2 * ds), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, ds), jnp.float32),
+    }
+
+
+def ssd_decode(
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, 1, d) -> (y (B,1,d), new cache)."""
+    B = x.shape[0]
+    di, ds, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x[:, 0] @ p["in_proj"]  # (B, ...)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    w = cfg.ssm_conv_width
+    hist = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # (B, w, ch)
+    conv = jnp.einsum("bwc,wc->bc", hist, p["conv_w"]) + p["conv_b"]
+    xBC_t = jax.nn.silu(conv)
+    xt = xBC_t[:, :di].reshape(B, nh, hp)
+    Bt, Ct = xBC_t[:, di : di + ds], xBC_t[:, di + ds :]
+    dt_t = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt_t * A[None, :])  # (B,nh)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t, xt.astype(jnp.float32), Bt.astype(jnp.float32))
+    h_new = cache["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Ct.astype(jnp.float32))
+    y = y + xt.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, di).astype(x.dtype)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"conv": hist[:, 1:], "ssm": h_new}

@@ -1,0 +1,1 @@
+from repro.optim.sgd import adamw_init, adamw_update, sgd_update  # noqa: F401

@@ -1,0 +1,38 @@
+"""Launch-layer integration: the dry-run lowers+compiles in a subprocess
+(512 placeholder devices must not leak into this test process)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.parametrize("extra", [[], ["--act-sharding", "--ce", "onehot", "--ce-chunk", "128"]])
+def test_dryrun_small_seq_subprocess(tmp_path, extra):
+    out = tmp_path / "rec.json"
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", "qwen1.5-0.5b", "--shape", "train_4k", "--seq", "512",
+        "--out", str(out), *extra,
+    ]
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    import os
+
+    env.update({k: v for k, v in os.environ.items() if k not in env})
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=560, cwd=REPO, env=env)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.loads(out.read_text())
+    assert rec["n_chips"] == 256
+    assert rec["cost"]["flops"] > 0
+    assert rec["roofline"]["bottleneck"] in ("compute", "memory", "collective")
+    for k in ("all-gather", "all-reduce", "total"):
+        assert rec["collectives"][k] >= 0
+
+
+def test_jax_device_count_unpolluted():
+    import jax
+
+    assert len(jax.devices()) < 512  # dryrun's XLA_FLAGS must never leak here

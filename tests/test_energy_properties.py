@@ -1,0 +1,92 @@
+"""Property-based tests on the energy-harvesting substrate — §III-C
+invariants: causality, battery bounds, accounting conservation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import energy as energy_lib
+
+
+def _run(n, S, kappa, p_bc, e_max, seed, want_all=True, battery0=None):
+    key = jax.random.PRNGKey(seed)
+    st0 = energy_lib.SlotState(
+        battery=jnp.zeros((n,), jnp.int32) if battery0 is None else battery0,
+        started=jnp.zeros((n,), bool),
+        start_slot=jnp.full((n,), S, jnp.int32),
+        pending=jnp.zeros((n,), bool),
+        uploaded=jnp.zeros((n,), bool),
+        counter=jnp.zeros((n,), jnp.int32),
+        energy_used=jnp.zeros((n,), jnp.int32),
+        key=key,
+    )
+    want = (lambda s, st: jnp.ones((n,), bool)) if want_all else (lambda s, st: jnp.zeros((n,), bool))
+    return energy_lib.scan_epoch(
+        st0, S=S, kappa=kappa, p_bc=p_bc, e_max=e_max, want_fn=want
+    )
+
+
+@given(
+    n=st.integers(1, 32),
+    S=st.integers(5, 60),
+    kappa=st.integers(1, 25),
+    p_bc=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_energy_invariants(n, S, kappa, p_bc, seed):
+    if kappa > S:
+        kappa = S
+    e_max = kappa + 5
+    st_out = _run(n, S, kappa, p_bc, seed=seed, e_max=e_max)
+    battery = np.asarray(st_out.battery)
+    used = np.asarray(st_out.energy_used)
+    started = np.asarray(st_out.started)
+    # battery within [0, e_max]
+    assert np.all(battery >= 0) and np.all(battery <= e_max)
+    # strict causality: total use <= total harvest (initial battery = 0), so
+    # battery = harvested - used >= 0 also implies used <= S (max harvest)
+    assert np.all(used <= S)
+    # a client that started paid at least kappa
+    assert np.all(used[started] >= kappa)
+    # a client that never started and never transmitted paid nothing
+    idle = ~started & ~st_out.uploaded & ~np.asarray(st_out.pending)
+    assert np.all(used[np.asarray(idle)] == 0)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_no_harvest_no_action(seed):
+    """p_bc = 0, battery 0: nothing can ever start (energy causality)."""
+    st_out = _run(8, 30, 20, 0.0, e_max=25, seed=seed)
+    assert not np.any(np.asarray(st_out.started))
+    assert np.all(np.asarray(st_out.energy_used) == 0)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_guaranteed_harvest_trains(seed):
+    """p_bc = 1: with S >= 2*kappa every willing client trains and uploads."""
+    S, kappa = 45, 20
+    st_out = _run(8, S, kappa, 1.0, e_max=kappa + 5, seed=seed)
+    assert np.all(np.asarray(st_out.started))
+    assert np.all(np.asarray(st_out.uploaded))
+    # exactly kappa (training) + 1 (upload) units consumed
+    assert np.all(np.asarray(st_out.energy_used) == kappa + 1)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    kappa=st.integers(2, 20),
+)
+@settings(max_examples=20, deadline=None)
+def test_deadline_respected(seed, kappa):
+    """No training may start after slot S - kappa (completes within epoch)."""
+    S = 30
+    if kappa > S:
+        return
+    st_out = _run(16, S, kappa, 1.0, e_max=kappa + 5, seed=seed)
+    starts = np.asarray(st_out.start_slot)
+    started = np.asarray(st_out.started)
+    assert np.all(starts[started] <= S - kappa)

@@ -1,0 +1,136 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle across
+shape/dtype sweeps (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.fedavg_reduce import fedavg_reduce
+from repro.kernels.swa_attention import swa_attention
+from repro.kernels.vaoi_distance import vaoi_distance
+
+
+@pytest.mark.parametrize("n,f", [(10, 10), (100, 10), (128, 512), (257, 300), (33, 1025)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vaoi_distance_sweep(n, f, dtype, rng):
+    ks = jax.random.split(rng, 4)
+    v = jax.random.normal(ks[0], (n, f), dtype)
+    h = jax.random.normal(ks[1], (n, f), dtype)
+    age = jax.random.randint(ks[2], (n,), 0, 7).astype(jnp.float32)
+    q = (jax.random.uniform(ks[3], (n,)) < 0.3).astype(jnp.float32)
+    m1, a1 = vaoi_distance(v, h, age, q, 0.5, interpret=True)
+    m2, a2 = ref.vaoi_distance_ref(v, h, age, q, 0.5)
+    tol = 1e-5 if dtype == jnp.float32 else 0.2
+    np.testing.assert_allclose(m1, m2, rtol=tol, atol=tol)
+    np.testing.assert_allclose(a1, a2, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("blocks", [(32, 128), (128, 512), (64, 64)])
+def test_vaoi_distance_block_invariance(blocks, rng):
+    bn, bf = blocks
+    v = jax.random.normal(rng, (200, 700))
+    h = jax.random.normal(jax.random.fold_in(rng, 1), (200, 700))
+    age = jnp.ones((200,))
+    q = jnp.zeros((200,))
+    m1, a1 = vaoi_distance(v, h, age, q, 1.0, block_n=bn, block_f=bf, interpret=True)
+    m2, a2 = ref.vaoi_distance_ref(v, h, age, q, 1.0)
+    np.testing.assert_allclose(m1, m2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(a1, a2, rtol=1e-5)
+
+
+@pytest.mark.parametrize("k,p", [(1, 128), (10, 1000), (100, 4096), (7, 333), (64, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_reduce_sweep(k, p, dtype, rng):
+    msgs = jax.random.normal(rng, (k, p), dtype)
+    w = jax.random.uniform(jax.random.fold_in(rng, 1), (k,))
+    w = w / w.sum()
+    o1 = fedavg_reduce(msgs, w, interpret=True)
+    o2 = ref.fedavg_reduce_ref(msgs, w)
+    tol = 1e-5 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(o1, o2, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize(
+    "b,h,s,d,window",
+    [
+        (1, 2, 128, 64, 0),
+        (2, 2, 256, 64, 64),
+        (1, 1, 200, 32, 48),  # padded S
+        (1, 2, 512, 128, 128),
+        (2, 1, 128, 64, 16),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_attention_sweep(b, h, s, d, window, dtype, rng):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, h, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, h, s, d), dtype)
+    o1 = swa_attention(q, k, v, window=window, block_q=64, block_k=64, interpret=True)
+    o2 = ref.swa_attention_ref(q, k, v, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(
+        np.asarray(o1, np.float32), np.asarray(o2, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_swa_matches_model_attention(rng):
+    """The kernel agrees with the model's sliding-window attention path."""
+    from repro.configs import get_config, reduced
+    from repro.models import attention
+
+    cfg = reduced(get_config("starcoder2-3b"))
+    assert cfg.sliding_window > 0
+    B, S = 2, 64
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, cfg.num_heads, S, cfg.head_dim))
+    k = jax.random.normal(ks[1], (B, cfg.num_heads, S, cfg.head_dim))
+    v = jax.random.normal(ks[2], (B, cfg.num_heads, S, cfg.head_dim))
+    o_kernel = swa_attention(q, k, v, window=cfg.sliding_window, block_q=32, block_k=32, interpret=True)
+    o_ref = ref.swa_attention_ref(q, k, v, window=cfg.sliding_window)
+    np.testing.assert_allclose(o_kernel, o_ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize(
+    "b,s,nh,hp,ds,chunk",
+    [
+        (1, 32, 2, 64, 16, 8),
+        (2, 64, 4, 64, 128, 16),
+        (1, 50, 2, 32, 16, 16),  # padded S
+        (1, 128, 1, 64, 128, 64),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(b, s, nh, hp, ds, chunk, dtype, rng):
+    from repro.kernels.ssd_scan import ssd_scan
+
+    ks = jax.random.split(rng, 5)
+    x = (jax.random.normal(ks[0], (b, s, nh, hp)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bm = (jax.random.normal(ks[3], (b, s, ds)) * 0.5).astype(dtype)
+    Cm = (jax.random.normal(ks[4], (b, s, ds)) * 0.5).astype(dtype)
+    y1, s1 = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    y2, s2 = ref.ssd_scan_ref(x, dt, A, Bm, Cm)
+    tol = 2e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(y1, y2, rtol=tol, atol=tol)
+    np.testing.assert_allclose(s1, s2, rtol=tol, atol=tol)
+
+
+def test_ssd_scan_matches_model_chunked(rng):
+    """Kernel == the model's pure-jnp chunked SSD (the dry-run path)."""
+    from repro.kernels.ssd_scan import ssd_scan
+    from repro.models import ssd as ssd_lib
+
+    ks = jax.random.split(rng, 5)
+    b, s, nh, hp, ds = 2, 48, 4, 32, 16
+    x = jax.random.normal(ks[0], (b, s, nh, hp)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, s, ds)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, s, ds)) * 0.5
+    y1, s1 = ssd_scan(x, dt, A, Bm, Cm, chunk=16, interpret=True)
+    y2, s2 = ssd_lib.ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    np.testing.assert_allclose(y1, y2, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(s1, s2, rtol=2e-5, atol=2e-5)

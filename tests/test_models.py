@@ -1,0 +1,206 @@
+"""Model correctness: decode==forward consistency, SSD exactness, MoE
+routing semantics, attention windowing."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import attention, decoder, moe, ssd
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen1.5-0.5b", "starcoder2-3b", "mamba2-1.3b", "jamba-v0.1-52b", "whisper-large-v3"]
+)
+def test_decode_matches_forward(arch, rng):
+    cfg = reduced(get_config(arch))
+    if cfg.num_experts:  # avoid capacity-drop mismatch: no drops at high cf
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = decoder.init_params(cfg, rng, max_seq=64)
+    B, S = 2, 12
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    enc_out = None
+    kw = {}
+    if cfg.is_encoder_decoder:
+        frames = jax.random.normal(rng, (B, cfg.encoder_seq, cfg.d_model))
+        kw["encoder_frames"] = frames
+    logits_full, _ = decoder.forward_logits(cfg, params, tokens, **kw)
+    if cfg.is_encoder_decoder:
+        enc_out = decoder._encode(cfg, params, frames)
+    cache = decoder.init_cache(cfg, B, 32)
+    outs = []
+    for t in range(S):
+        lt, cache = decoder.decode_step(
+            cfg, params, cache, tokens[:, t : t + 1], jnp.full((B,), t), encoder_out=enc_out
+        )
+        outs.append(lt)
+    logits_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_full, np.float32), np.asarray(logits_dec, np.float32), atol=2e-4, rtol=1e-3
+    )
+
+
+def test_ssd_chunked_equals_recurrence(rng):
+    cfg = reduced(get_config("mamba2-1.3b"))
+    p = ssd.init_ssd(rng, cfg, jnp.float32)
+    B, S = 2, 24
+    x = jax.random.normal(rng, (B, S, cfg.d_model)) * 0.5
+    y_full = ssd.ssd_forward(cfg, p, x)
+    cache = ssd.init_ssd_cache(cfg, B, jnp.float32)
+    ys = []
+    for t in range(S):
+        yt, cache = ssd.ssd_decode(cfg, p, x[:, t : t + 1], cache)
+        ys.append(yt)
+    np.testing.assert_allclose(y_full, jnp.concatenate(ys, 1), atol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 24])
+def test_ssd_chunk_invariance(chunk, rng):
+    cfg = dataclasses.replace(reduced(get_config("mamba2-1.3b")), ssm_chunk=chunk)
+    cfg64 = dataclasses.replace(cfg, ssm_chunk=64)
+    p = ssd.init_ssd(rng, cfg, jnp.float32)
+    x = jax.random.normal(rng, (2, 24, cfg.d_model)) * 0.5
+    np.testing.assert_allclose(
+        ssd.ssd_forward(cfg, p, x), ssd.ssd_forward(cfg64, p, x), atol=1e-4
+    )
+
+
+def test_ssd_init_state_carry(rng):
+    """Chunked SSD with an initial state == processing the concatenation."""
+    cfg = reduced(get_config("mamba2-1.3b"))
+    nh, hp, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    B, S1, S2 = 1, 16, 16
+    ks = jax.random.split(rng, 5)
+    x = jax.random.normal(ks[0], (B, S1 + S2, nh, hp))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S1 + S2, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S1 + S2, ds))
+    Cm = jax.random.normal(ks[4], (B, S1 + S2, ds))
+    y_all, final_all = ssd.ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+    y1, s1 = ssd.ssd_chunked(x[:, :S1], dt[:, :S1], A, Bm[:, :S1], Cm[:, :S1], chunk=8)
+    y2, s2 = ssd.ssd_chunked(
+        x[:, S1:], dt[:, S1:], A, Bm[:, S1:], Cm[:, S1:], chunk=8, init_state=s1
+    )
+    np.testing.assert_allclose(y_all[:, S1:], y2, atol=1e-4)
+    np.testing.assert_allclose(final_all, s2, atol=1e-4)
+
+
+def test_moe_group_invariance(rng):
+    """Routing in groups must equal one-group routing when capacity is ample."""
+    cfg = dataclasses.replace(reduced(get_config("deepseek-moe-16b")), capacity_factor=8.0)
+    p = moe.init_moe(rng, cfg, jnp.float32)
+    x = jax.random.normal(rng, (2, 16, cfg.d_model))
+    y1, _ = moe.apply_moe(cfg, p, x, group_size=4)
+    y2, _ = moe.apply_moe(cfg, p, x, group_size=16)
+    np.testing.assert_allclose(y1, y2, atol=1e-5)
+
+
+def test_moe_capacity_drops_tokens(rng):
+    """With capacity_factor ~ 0 most tokens are dropped -> output ~ shared only."""
+    cfg = dataclasses.replace(
+        reduced(get_config("deepseek-moe-16b")), capacity_factor=1e-6, num_shared_experts=0
+    )
+    p = moe.init_moe(rng, cfg, jnp.float32)
+    x = jax.random.normal(rng, (1, 8, cfg.d_model))
+    y, _ = moe.apply_moe(cfg, p, x, group_size=8)
+    # capacity 1 per expert per group: at most E tokens routed; most output
+    # rows for dropped tokens must be exactly zero
+    norms = jnp.linalg.norm(y[0], axis=-1)
+    assert int((norms == 0).sum()) >= 8 - cfg.num_experts
+
+
+def test_moe_router_gradients_flow(rng):
+    cfg = reduced(get_config("llama4-scout-17b-a16e"))
+    p = moe.init_moe(rng, cfg, jnp.float32)
+    x = jax.random.normal(rng, (1, 8, cfg.d_model))
+
+    def loss(p):
+        y, aux = moe.apply_moe(cfg, p, x)
+        return jnp.sum(y**2) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["router"]).max()) > 0
+
+
+def test_sliding_window_masks_far_context(rng):
+    """With window w, tokens > w in the past cannot influence the output."""
+    cfg = dataclasses.replace(reduced(get_config("starcoder2-3b")), sliding_window=4)
+    p = attention.init_attn(rng, cfg, jnp.float32)
+    S = 12
+    x1 = jax.random.normal(rng, (1, S, cfg.d_model))
+    x2 = x1.at[:, 0].add(100.0)  # perturb a token far outside the window
+    pos = jnp.arange(S)
+    o1 = attention.attn_forward(cfg, p, x1, pos, window=4)
+    o2 = attention.attn_forward(cfg, p, x2, pos, window=4)
+    np.testing.assert_allclose(o1[:, 8:], o2[:, 8:], atol=1e-4)
+    assert float(jnp.abs(o1[:, 0] - o2[:, 0]).max()) > 1e-3  # but it does affect itself
+
+
+def test_rolling_cache_decode_matches_window_forward(rng):
+    """Rolling-buffer decode == full forward with sliding-window mask."""
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen1.5-0.5b")), sliding_window=0, use_rope=True
+    )
+    params = decoder.init_params(cfg, rng, max_seq=64)
+    B, S, W = 1, 20, 8
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    logits_win, _ = decoder.forward_logits(cfg, params, tokens, window=W)
+    cache = decoder.init_cache(cfg, B, W, rolling=True)
+    outs = []
+    for t in range(S):
+        lt, cache = decoder.decode_step(
+            cfg, params, cache, tokens[:, t : t + 1], jnp.full((B,), t), rolling=True
+        )
+        outs.append(lt)
+    logits_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_win, np.float32), np.asarray(logits_dec, np.float32), atol=2e-4, rtol=1e-3
+    )
+
+
+def test_vlm_prefix_changes_output(rng):
+    cfg = reduced(get_config("internvl2-2b"))
+    params = decoder.init_params(cfg, rng, max_seq=64)
+    tokens = jax.random.randint(rng, (1, 8), 0, cfg.vocab_size)
+    pe1 = jnp.zeros((1, cfg.num_prefix_tokens, cfg.d_model))
+    pe2 = jax.random.normal(rng, (1, cfg.num_prefix_tokens, cfg.d_model))
+    l1, _ = decoder.forward_logits(cfg, params, tokens, prefix_embeddings=pe1)
+    l2, _ = decoder.forward_logits(cfg, params, tokens, prefix_embeddings=pe2)
+    assert l1.shape == (1, 8, cfg.vocab_size)
+    assert float(jnp.abs(l1 - l2).max()) > 1e-3
+
+
+def test_whisper_cross_cache_decode_matches_forward(rng):
+    """Cached cross K/V (no per-token encoder re-projection) is exact."""
+    cfg = reduced(get_config("whisper-large-v3"))
+    params = decoder.init_params(cfg, rng, max_seq=64)
+    B, S = 2, 8
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    frames = jax.random.normal(rng, (B, cfg.encoder_seq, cfg.d_model))
+    logits_full, _ = decoder.forward_logits(cfg, params, tokens, encoder_frames=frames)
+    enc = decoder._encode(cfg, params, frames)
+    cache = decoder.prefill_cross_cache(
+        cfg, params, decoder.init_cache(cfg, B, 32, cross_cache=True), enc
+    )
+    outs = []
+    for t in range(S):
+        lt, cache = decoder.decode_step(cfg, params, cache, tokens[:, t : t + 1], jnp.full((B,), t))
+        outs.append(lt)
+    np.testing.assert_allclose(
+        np.asarray(logits_full, np.float32),
+        np.asarray(jnp.concatenate(outs, 1), np.float32),
+        atol=2e-4, rtol=1e-3,
+    )
+
+
+def test_ssd_forward_kernel_path_matches(rng):
+    """ssd_forward(use_kernel=True) routes through the Pallas ssd_scan kernel
+    and matches the pure-jnp chunked path."""
+    cfg = reduced(get_config("mamba2-1.3b"))
+    p = ssd.init_ssd(rng, cfg, jnp.float32)
+    x = jax.random.normal(rng, (2, 24, cfg.d_model)) * 0.5
+    y_jnp = ssd.ssd_forward(cfg, p, x)
+    y_ker = ssd.ssd_forward(cfg, p, x, use_kernel=True)
+    np.testing.assert_allclose(y_jnp, y_ker, atol=1e-4, rtol=1e-4)

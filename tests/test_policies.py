@@ -1,0 +1,97 @@
+"""Scheduling-policy semantics (Alg. 2 + §V baselines)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import policies
+
+
+def test_policy_registry():
+    for name in policies.POLICIES:
+        spec = policies.make_policy(name, num_clients=100, k=10)
+        assert spec.name == name
+    with pytest.raises(ValueError):
+        policies.make_policy("nope", num_clients=10, k=2)
+
+
+def test_fedbacys_group_cycling():
+    spec = policies.make_policy("fedbacys", num_clients=100, k=10)
+    assert spec.cyclic_groups == 10
+    age = jnp.zeros((100,))
+    sel_t0 = policies.epoch_selection(spec, age, jnp.asarray(0), 10, jax.random.PRNGKey(0))
+    sel_t1 = policies.epoch_selection(spec, age, jnp.asarray(1), 10, jax.random.PRNGKey(0))
+    sel_t10 = policies.epoch_selection(spec, age, jnp.asarray(10), 10, jax.random.PRNGKey(0))
+    assert int(sel_t0.sum()) == 10
+    assert not bool(jnp.any(sel_t0 & sel_t1))  # disjoint groups
+    np.testing.assert_array_equal(sel_t0, sel_t10)  # cycle length G
+
+
+def test_fedavg_selects_everyone():
+    spec = policies.make_policy("fedavg", num_clients=7, k=3)
+    sel = policies.epoch_selection(spec, jnp.zeros((7,)), jnp.asarray(4), 3, jax.random.PRNGKey(1))
+    assert bool(jnp.all(sel))
+
+
+def test_want_fn_timing():
+    S, kappa = 30, 20
+    sel = jnp.ones((4,), bool)
+    from repro.core.energy import SlotState
+
+    st = SlotState(
+        battery=jnp.full((4,), 25, jnp.int32),
+        started=jnp.zeros((4,), bool),
+        start_slot=jnp.full((4,), S, jnp.int32),
+        pending=jnp.zeros((4,), bool),
+        uploaded=jnp.zeros((4,), bool),
+        counter=jnp.ones((4,), jnp.int32),
+        energy_used=jnp.zeros((4,), jnp.int32),
+        key=jax.random.PRNGKey(0),
+    )
+    greedy = policies.make_want_fn(policies.make_policy("fedavg", num_clients=4, k=4), sel, S, kappa)
+    assert bool(jnp.all(greedy(jnp.asarray(0), st)))
+    bacys = policies.make_want_fn(policies.make_policy("fedbacys", num_clients=4, k=4), sel, S, kappa)
+    assert not bool(jnp.any(bacys(jnp.asarray(0), st)))  # procrastinates
+    assert bool(jnp.all(bacys(jnp.asarray(S - kappa), st)))  # last feasible slot
+    odd = policies.make_want_fn(
+        policies.make_policy("fedbacys_odd", num_clients=4, k=4), sel, S, kappa
+    )
+    assert bool(jnp.all(odd(jnp.asarray(S - kappa), st)))  # counter=1 (odd) -> train
+    st_even = st._replace(counter=jnp.zeros((4,), jnp.int32))
+    assert not bool(jnp.any(odd(jnp.asarray(S - kappa), st_even)))  # even -> skip
+
+
+def test_fedbacys_odd_skips_every_other_opportunity():
+    """Integration: with p_bc=1 (always-charged), fedbacys trains every cycle,
+    fedbacys_odd every other cycle."""
+    from repro.core import energy as energy_lib
+
+    def run_epochs(policy_name, epochs=6):
+        n, S, kappa = 4, 45, 20
+        spec = policies.make_policy(policy_name, num_clients=n, k=n, num_groups=1)
+        battery = jnp.full((n,), 25, jnp.int32)
+        pending = jnp.zeros((n,), bool)
+        counter = jnp.zeros((n,), jnp.int32)
+        key = jax.random.PRNGKey(0)
+        starts = []
+        for t in range(epochs):
+            key, ks = jax.random.split(key)
+            sel = policies.epoch_selection(spec, jnp.zeros((n,)), jnp.asarray(t), n, ks)
+            st0 = energy_lib.SlotState(
+                battery=battery, started=jnp.zeros((n,), bool),
+                start_slot=jnp.full((n,), S, jnp.int32), pending=pending,
+                uploaded=jnp.zeros((n,), bool), counter=counter,
+                energy_used=jnp.zeros((n,), jnp.int32), key=ks,
+            )
+            st = energy_lib.scan_epoch(
+                st0, S=S, kappa=kappa, p_bc=1.0, e_max=25,
+                want_fn=policies.make_want_fn(spec, sel, S, kappa),
+                count_opportunity_fn=policies.make_opportunity_fn(spec, sel, S, kappa),
+            )
+            battery, pending, counter = st.battery, st.pending, st.counter
+            starts.append(int(st.started.sum()))
+        return starts
+
+    assert run_epochs("fedbacys") == [4, 4, 4, 4, 4, 4]
+    # odd-chance rule: counter hits 1 (odd -> train), then 2 (skip), ...
+    assert run_epochs("fedbacys_odd") == [4, 0, 4, 0, 4, 0]

@@ -1,0 +1,109 @@
+"""Property-based tests (hypothesis) on the VAoI metric — Eq. (2)/(7)
+invariants from the paper."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra.numpy import arrays
+
+from repro.core.vaoi import feature_distance, select_topk, vaoi_update
+
+ages = arrays(np.float32, st.integers(1, 64), elements=st.floats(0, 1000, width=32))
+
+
+@given(
+    age=ages,
+    mu=st.floats(0.0, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=50, deadline=None)
+def test_vaoi_update_invariants(age, mu, seed):
+    n = age.shape[0]
+    rng = np.random.RandomState(seed)
+    m = rng.exponential(1.0, n).astype(np.float32)
+    q = (rng.rand(n) < 0.5).astype(np.float32)
+    new = np.asarray(vaoi_update(jnp.asarray(age), jnp.asarray(m), jnp.asarray(q), mu))
+    # (1) participation resets the age to exactly zero
+    assert np.all(new[q == 1.0] == 0.0)
+    # (2) ages never go negative
+    assert np.all(new >= 0.0)
+    # (3) non-participants: age grows by exactly 1 iff M >= mu, else unchanged
+    np_mask = q == 0.0
+    expected = np.where(m >= mu, age + 1.0, age)
+    assert np.allclose(new[np_mask], expected[np_mask])
+    # (4) growth is bounded by +1 per round
+    assert np.all(new <= age + 1.0)
+
+
+@given(
+    n=st.integers(2, 64),
+    k_frac=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_select_topk_properties(n, k_frac, seed):
+    k = max(1, int(n * k_frac))
+    rng = np.random.RandomState(seed)
+    age = jnp.asarray(rng.exponential(5.0, n).astype(np.float32))
+    sel = np.asarray(select_topk(age, k, jax.random.PRNGKey(seed)))
+    # exactly k selected
+    assert sel.sum() == k
+    # selection respects ordering up to the 1e-3 tie-break noise:
+    # every selected client's age >= every unselected client's age - epsilon
+    if k < n:
+        min_sel = float(np.asarray(age)[sel].min())
+        max_unsel = float(np.asarray(age)[~sel].max())
+        total = float(np.asarray(age).sum())
+        eps = 1e-3 * max(total, 1.0) + 1e-6
+        assert min_sel >= max_unsel - eps
+
+
+@given(
+    nf=st.tuples(st.integers(1, 32), st.integers(1, 64)),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_feature_distance_is_a_metric(nf, seed):
+    n, f = nf
+    rng = np.random.RandomState(seed)
+    v = jnp.asarray(rng.randn(n, f).astype(np.float32))
+    h = jnp.asarray(rng.randn(n, f).astype(np.float32))
+    d_vh = np.asarray(feature_distance(v, h))
+    d_hv = np.asarray(feature_distance(h, v))
+    d_vv = np.asarray(feature_distance(v, v))
+    assert np.all(d_vh >= 0)
+    assert np.allclose(d_vh, d_hv, rtol=1e-6)  # symmetry
+    assert np.allclose(d_vv, 0.0, atol=1e-6)  # identity
+    # triangle inequality through a third point
+    w = jnp.asarray(rng.randn(n, f).astype(np.float32))
+    d_vw = np.asarray(feature_distance(v, w))
+    d_wh = np.asarray(feature_distance(w, h))
+    assert np.all(d_vh <= d_vw + d_wh + 1e-4)
+
+
+def test_vaoi_cold_start_uniformity():
+    """All-zero ages (t=0): selection must still return exactly k clients."""
+    age = jnp.zeros((50,))
+    seen = set()
+    for s in range(20):
+        sel = np.asarray(select_topk(age, 5, jax.random.PRNGKey(s)))
+        assert sel.sum() == 5
+        seen.update(np.nonzero(sel)[0].tolist())
+    # random tie-breaking explores different clients across keys
+    assert len(seen) > 10
+
+
+def test_select_gumbel_properties():
+    """Stochastic selection: exactly k chosen; frequency tracks age mass."""
+    import numpy as np
+    from repro.core.vaoi import select_gumbel
+
+    age = jnp.asarray([10.0, 10.0, 10.0, 0.1, 0.1, 0.1, 0.1, 0.1])
+    counts = np.zeros(8)
+    for s in range(200):
+        sel = np.asarray(select_gumbel(age, 2, jax.random.PRNGKey(s)))
+        assert sel.sum() == 2
+        counts += sel
+    # the three heavy clients should dominate the selections
+    assert counts[:3].sum() > counts[3:].sum()
