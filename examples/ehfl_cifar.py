@@ -18,7 +18,7 @@ import numpy as np
 from repro.checkpoint import save_pytree
 from repro.configs.cifar_cnn import CONFIG as PAPER_CNN
 from repro.configs.cifar_cnn import CNNConfig
-from repro.core import EHFLConfig, run_simulation
+from repro.core import SCENARIOS, EHFLConfig, run_batch, run_simulation
 from repro.data import make_federated_dataset
 from repro.fl import cnn_backend
 
@@ -35,6 +35,10 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=6)
     ap.add_argument("--mu", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--harvest", default="bernoulli", choices=list(SCENARIOS),
+                    help="energy-arrival scenario (repro.core.harvest)")
+    ap.add_argument("--num-seeds", type=int, default=1,
+                    help=">1: vmapped multi-seed sweep in one jitted call (run_batch)")
     ap.add_argument("--paper-scale", action="store_true",
                     help="full paper protocol: N=100, T=500, 300 samples, 32px CNN")
     ap.add_argument("--out", default="experiments/ehfl_cifar")
@@ -49,7 +53,8 @@ def main() -> None:
         image = 16
 
     print(f"EHFL driver: policy={args.policy} N={args.clients} T={args.rounds} "
-          f"alpha={args.alpha} p_bc={args.p_bc} cnn={cnn.conv_channels}")
+          f"alpha={args.alpha} p_bc={args.p_bc} harvest={args.harvest} "
+          f"cnn={cnn.conv_channels}")
     data = make_federated_dataset(
         jax.random.PRNGKey(args.seed), num_clients=args.clients,
         samples_per_client=args.samples, alpha=args.alpha, test_size=500,
@@ -60,26 +65,40 @@ def main() -> None:
         kappa=20, p_bc=args.p_bc, k=args.k, mu=args.mu, e_max=25,
         policy=args.policy, alpha=args.alpha, seed=args.seed,
         eval_every=max(args.rounds // 10, 1), probe_size=20, lr=0.01,
+        harvest=args.harvest,
     )
+    backend = cnn_backend(cnn)
     t0 = time.time()
-    out = run_simulation(cfg, cnn_backend(cnn), data)
-    wall = time.time() - t0
-    m = out["metrics"]
+    if args.num_seeds > 1:
+        seeds = [args.seed + i for i in range(args.num_seeds)]
+        out = run_batch(cfg, backend, data, seeds)
+        wall = time.time() - t0
+        # report seed means (every metric has a leading seed axis except the
+        # shared eval schedule); keep seed 0's model for the checkpoint
+        m = {k: np.asarray(v) if k == "f1_epochs" else np.asarray(v).mean(0)
+             for k, v in out["metrics"].items()}
+        params = jax.tree.map(lambda x: x[0], out["global_params"])
+    else:
+        out = run_simulation(cfg, backend, data)
+        wall = time.time() - t0
+        m = out["metrics"]
+        params = out["global_params"]
     outdir = Path(args.out)
     outdir.mkdir(parents=True, exist_ok=True)
-    tag = f"{args.policy}_a{args.alpha}_p{args.p_bc}"
-    save_pytree(out["global_params"], outdir / f"{tag}_model.npz")
+    tag = f"{args.policy}_{args.harvest}_a{args.alpha}_p{args.p_bc}"
+    save_pytree(params, outdir / f"{tag}_model.npz")
     (outdir / f"{tag}_metrics.json").write_text(json.dumps({
         "f1": np.asarray(m["f1"]).tolist(),
         "f1_epochs": np.asarray(m["f1_epochs"]).tolist(),
         "avg_age": np.asarray(m["avg_age"]).tolist(),
         "energy": np.asarray(m["energy"]).tolist(),
         "total_energy": float(m["total_energy"]),
+        "num_seeds": args.num_seeds,
         "wall_s": wall,
     }))
-    print(f"f1 trajectory: {[round(float(x), 4) for x in m['f1']]}")
+    print(f"f1 trajectory: {[round(float(x), 4) for x in np.asarray(m['f1'])]}")
     print(f"total energy: {float(m['total_energy']):.0f} units | "
-          f"trainings: {int(m['n_started'].sum())} | wall: {wall:.1f}s")
+          f"trainings: {int(np.asarray(m['n_started']).sum())} | wall: {wall:.1f}s")
     print(f"saved model+metrics -> {outdir}/{tag}_*")
 
 

@@ -1,4 +1,12 @@
 # The paper's primary contribution: feature-based semantics-aware (VAoI)
 # scheduling for energy-harvesting federated learning.
-from repro.core.simulator import Backend, EHFLConfig, run_simulation  # noqa: F401
+from repro.core.harvest import SCENARIOS, HarvestProcess, make_process  # noqa: F401
+from repro.core.simulator import (  # noqa: F401
+    Backend,
+    EHFLConfig,
+    init_carry,
+    make_epoch_fn,
+    run_batch,
+    run_simulation,
+)
 from repro.core.vaoi import client_select, feature_distance, select_topk, vaoi_update  # noqa: F401

@@ -18,10 +18,12 @@ the mask of clients that would *like* to start training at this slot.
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import harvest as harvest_lib
 
 
 class SlotState(NamedTuple):
@@ -33,9 +35,14 @@ class SlotState(NamedTuple):
     counter: jax.Array  # (N,) int32 — FedBacys-Odd opportunity counter
     energy_used: jax.Array  # (N,) int32 — cumulative units consumed
     key: jax.Array
+    # HarvestProcess state (DESIGN.md §7); None -> initialized from ``key``
+    # inside ``scan_epoch`` (the memoryless/per-epoch-reseed path).
+    harvest: Any = None
 
 
 def harvest_step(key: jax.Array, battery: jax.Array, p_bc: float, e_max: int) -> Tuple[jax.Array, jax.Array]:
+    """Legacy single-step Bernoulli harvest (Eq. 3).  Kept as the reference
+    the ``bernoulli`` HarvestProcess is tested bit-identical against."""
     k1, k2 = jax.random.split(key)
     charge = jax.random.bernoulli(k1, p_bc, battery.shape).astype(battery.dtype)
     return jnp.minimum(battery + charge, e_max), k2
@@ -46,20 +53,39 @@ def scan_epoch(
     *,
     S: int,
     kappa: int,
-    p_bc: float,
     e_max: int,
     want_fn: Callable[[jax.Array, SlotState], jax.Array],
+    p_bc: float | None = None,
+    process: harvest_lib.HarvestProcess | None = None,
     count_opportunity_fn: Callable[[jax.Array, SlotState], jax.Array] | None = None,
 ) -> SlotState:
     """Run S slots of battery/action dynamics. Returns the post-epoch state.
 
+    Energy arrivals come from ``process`` (any :class:`HarvestProcess`);
+    passing ``p_bc`` alone is the backward-compatible Bernoulli shorthand.
+    If ``state.harvest`` is None the process state is initialized from
+    ``state.key`` (for ``bernoulli`` this reproduces the seed behavior
+    bit-for-bit); persistent processes should thread their state in/out via
+    the ``harvest`` field instead.
+
     ``count_opportunity_fn`` (FedBacys-Odd): mask of clients whose opportunity
     counter increments this slot (criteria (i)-(iii) met).
     """
+    if process is None:
+        if p_bc is None:
+            raise ValueError("scan_epoch needs either p_bc or a HarvestProcess")
+        process = harvest_lib.bernoulli(p_bc)
+    if state.harvest is None:
+        state = state._replace(harvest=process.init(state.key, state.battery.shape[0]))
 
     def slot_body(st: SlotState, s: jax.Array) -> Tuple[SlotState, None]:
-        battery, key = harvest_step(st.key, st.battery, p_bc, e_max)
-        st = st._replace(battery=battery, key=key)
+        charge, hstate = process.step(st.harvest, st.battery)
+        battery = jnp.minimum(st.battery + charge.astype(st.battery.dtype), e_max)
+        # advance the per-slot key exactly as the seed code did (it was the
+        # harvest chain then), so want_fn/count_opportunity_fn implementations
+        # drawing randomness from st.key keep a fresh key every slot
+        key = jax.random.split(st.key)[1]
+        st = st._replace(battery=battery, harvest=hstate, key=key)
         busy = st.started & (s >= st.start_slot) & (s < st.start_slot + kappa)
         # --- opportunity counting (before the odd-gate decides) ---
         counter = st.counter

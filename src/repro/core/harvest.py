@@ -1,0 +1,199 @@
+"""Harvest-scenario library — pluggable energy-arrival processes (DESIGN.md §7).
+
+The paper's energy model (§III-C, Eq. 3/4) is a homogeneous Bernoulli arrival
+with one scalar ``p_bc``.  Robustness claims about semantics-aware scheduling
+only bite under *realistic* energy: bursty (Markovian), time-varying
+(solar/diurnal), and heterogeneous (per-client rates).  This module factors
+the arrival process out of ``repro.core.energy`` behind a tiny stateful
+protocol so every scenario runs through the same slot-level dynamics:
+
+  * ``init(key, n) -> state``      — build the per-simulation process state;
+  * ``step(state, battery) -> (charge, state)`` — one slot: ``charge`` is an
+    ``(N,)`` int32 vector of arriving energy units (0/1 per the paper's
+    unit-quantized model); capping at ``e_max`` stays in the battery code.
+
+``persistent`` distinguishes processes whose state must survive across epochs
+(Markov phase, diurnal clock, heterogeneous rates — threaded through the
+simulator's ``EpochCarry``) from the memoryless Bernoulli default, which is
+re-seeded per epoch from the slot-scan key exactly as the seed code did —
+keeping the default scenario bit-identical to the original ``harvest_step``
+chain.
+
+Scenarios (all parameterized so the long-run mean arrival rate is ``p_bc``,
+making cross-scenario comparisons energy-neutral):
+
+  bernoulli  — i.i.d. arrivals w.p. ``p_bc`` (paper-faithful default).
+  markov     — Gilbert–Elliott ON/OFF bursts: arrivals w.p. ``p_on`` while
+               ON, none while OFF; ``sojourn`` sets the phase-relaxation
+               timescale (mean ON sojourn is sojourn/(1-pi), OFF sojourn
+               sojourn/pi for stationary ON-fraction pi = p_bc/p_on).
+  diurnal    — deterministic solar-like half-sine intensity over a ``period``
+               slot day (daylight fraction ``day_frac``) × Bernoulli
+               thinning; peak/daylight-width/base are renormalized so the
+               day-averaged rate is exactly ``p_bc`` for any p_bc.
+  hetero     — static per-client rates drawn once from a
+               Beta(c·p_bc, c·(1−p_bc)) profile (mean ``p_bc``, heterogeneity
+               controlled by the concentration ``c``); i.i.d. thinning per
+               slot at each client's own rate.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SCENARIOS = ("bernoulli", "markov", "diurnal", "hetero")
+
+
+class HarvestProcess(NamedTuple):
+    """A stateful energy-arrival process (see module docstring)."""
+
+    name: str
+    persistent: bool  # state survives across epochs (else re-seeded per epoch)
+    mean_rate: float  # configured long-run arrival rate (units/slot/client)
+    init: Callable[[jax.Array, int], Any]
+    step: Callable[[Any, jax.Array], Tuple[jax.Array, Any]]
+
+
+# ---------------------------------------------------------------------------
+# Scenarios
+# ---------------------------------------------------------------------------
+
+
+def bernoulli(p_bc: float) -> HarvestProcess:
+    """Paper-faithful i.i.d. arrivals (Eq. 3).  State is just the PRNG key;
+    the split/draw sequence is bit-identical to the original
+    ``energy.harvest_step``."""
+
+    def init(key: jax.Array, n: int) -> jax.Array:
+        return key
+
+    def step(key: jax.Array, battery: jax.Array):
+        k1, k2 = jax.random.split(key)
+        charge = jax.random.bernoulli(k1, p_bc, battery.shape).astype(jnp.int32)
+        return charge, k2
+
+    return HarvestProcess("bernoulli", False, float(p_bc), init, step)
+
+
+def markov(p_bc: float, p_on: float = 0.8, sojourn: float = 8.0) -> HarvestProcess:
+    """Gilbert–Elliott ON/OFF bursts.  Each client holds a binary phase z;
+    arrivals occur w.p. ``p_on`` while ON and never while OFF.  The
+    stationary ON-fraction pi = p_bc / p_on makes the long-run rate exactly
+    ``p_bc``; ``sojourn`` = 1/(g2b + b2g) is the phase-relaxation timescale,
+    so the mean ON sojourn is sojourn/(1-pi) and the mean OFF sojourn
+    sojourn/pi (scarce energy = rare but long ON bursts separated by long
+    blackouts — at the defaults p_bc=0.1, p_on=0.8: ~9-slot bursts, ~64-slot
+    blackouts)."""
+    # clamp into [p_bc, 1]: below p_bc the mean is unreachable, above 1 the
+    # ON-state draw saturates and would silently undershoot the mean
+    p_on = min(1.0, max(float(p_on), min(1.0, float(p_bc))))
+    pi_on = 0.0 if p_on == 0.0 else min(1.0, float(p_bc) / p_on)
+    sojourn = max(1.0, float(sojourn))
+    g2b = (1.0 - pi_on) / sojourn  # ON -> OFF
+    b2g = pi_on / sojourn  # OFF -> ON
+
+    def init(key: jax.Array, n: int):
+        k_z, k_run = jax.random.split(key)
+        z = jax.random.bernoulli(k_z, pi_on, (n,))
+        return z, k_run
+
+    def step(state, battery: jax.Array):
+        z, key = state
+        k_arr, k_flip, k_next = jax.random.split(key, 3)
+        charge = jax.random.bernoulli(
+            k_arr, jnp.where(z, p_on, 0.0)
+        ).astype(jnp.int32)
+        flip = jax.random.bernoulli(k_flip, jnp.where(z, g2b, b2g))
+        return charge, (z ^ flip, k_next)
+
+    return HarvestProcess("markov", True, float(p_bc), init, step)
+
+
+def diurnal(p_bc: float, period: float = 240.0, day_frac: float = 0.5) -> HarvestProcess:
+    """Solar-like deterministic intensity × Bernoulli thinning.  One "day" is
+    ``period`` slots; the first ``day_frac`` of it is daylight with half-sine
+    intensity, the rest is night (zero arrivals).  The slot clock persists
+    across epochs, so days span epochs.
+
+    The waveform is renormalized so the day-averaged rate is exactly
+    ``p_bc`` for ANY p_bc in [0, 1] (the gallery's mean-rate-matched
+    guarantee): while p_bc <= 2*day_frac/pi the half-sine peak is scaled
+    down; for larger p_bc the daylight window widens (peak pinned at 1)
+    up to the full day; beyond p_bc = 2/pi — where even a full-day sine
+    cannot carry the mean — a constant base rate fills the remainder
+    (night disappears, as it must at near-saturated harvest)."""
+    period = max(1.0, float(period))
+    day_frac = min(1.0, max(1e-6, float(day_frac)))
+    p_bc = min(1.0, max(0.0, float(p_bc)))
+    full_sine_mean = 2.0 / math.pi
+    if p_bc <= day_frac * full_sine_mean:
+        p_peak, base = p_bc / (day_frac * full_sine_mean), 0.0
+    elif p_bc <= full_sine_mean:
+        day_frac, p_peak, base = p_bc / full_sine_mean, 1.0, 0.0
+    else:  # base + (1-base) * full-day sine, solved for the exact mean
+        day_frac, p_peak = 1.0, 1.0
+        base = (p_bc - full_sine_mean) / (1.0 - full_sine_mean)
+
+    def intensity(t: jax.Array) -> jax.Array:
+        phase = (t.astype(jnp.float32) % period) / period  # [0, 1)
+        day = phase < day_frac
+        return jnp.where(day, jnp.sin(jnp.pi * phase / day_frac), 0.0)
+
+    def init(key: jax.Array, n: int):
+        return jnp.zeros((), jnp.int32), key
+
+    def step(state, battery: jax.Array):
+        t, key = state
+        k1, k2 = jax.random.split(key)
+        p_t = base + (1.0 - base) * p_peak * intensity(t)
+        charge = jax.random.bernoulli(k1, p_t, battery.shape).astype(jnp.int32)
+        return charge, (t + 1, k2)
+
+    return HarvestProcess("diurnal", True, float(p_bc), init, step)
+
+
+def hetero(p_bc: float, concentration: float = 2.0) -> HarvestProcess:
+    """Static per-client rates r_i ~ Beta(c*p_bc, c*(1-p_bc)) — mean ``p_bc``,
+    spread controlled by the concentration c (small c = a few energy-rich
+    clients among many starved ones; the EH-IoT deployment profile)."""
+    c = max(1e-3, float(concentration))
+    degenerate = not (0.0 < p_bc < 1.0)
+
+    def init(key: jax.Array, n: int):
+        k_r, k_run = jax.random.split(key)
+        if degenerate:
+            rates = jnp.full((n,), float(p_bc), jnp.float32)
+        else:
+            rates = jax.random.beta(k_r, c * p_bc, c * (1.0 - p_bc), (n,))
+        return rates.astype(jnp.float32), k_run
+
+    def step(state, battery: jax.Array):
+        rates, key = state
+        k1, k2 = jax.random.split(key)
+        charge = jax.random.bernoulli(k1, rates).astype(jnp.int32)
+        return charge, (rates, k2)
+
+    return HarvestProcess("hetero", True, float(p_bc), init, step)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_FACTORIES: dict = {
+    "bernoulli": bernoulli,
+    "markov": markov,
+    "diurnal": diurnal,
+    "hetero": hetero,
+}
+
+
+def make_process(name: str, p_bc: float, **params: float) -> HarvestProcess:
+    """Build a named scenario; ``p_bc`` is the target mean rate for all of
+    them (the Bernoulli shorthand kept for backward compatibility)."""
+    if name not in _FACTORIES:
+        raise ValueError(f"unknown harvest scenario {name!r}; known: {SCENARIOS}")
+    return _FACTORIES[name](p_bc, **params)

@@ -7,6 +7,12 @@ Each policy supplies, per epoch:
 
 Policies:
   vaoi          — the paper: top-k by VAoI, start ASAP within the epoch.
+  vaoi_soft     — beyond-paper ablation: Gumbel-top-k selection
+                  (``vaoi.select_gumbel``) samples k clients WITHOUT
+                  replacement with probability proportional to normalized
+                  age, instead of Alg. 2's deterministic top-k.  Identical
+                  slot-level behavior to ``vaoi`` otherwise; it adds
+                  exploration under age ties (cold start, saturated ages).
   fedavg        — greedy energy-aware baseline: everyone, ASAP.
   fedbacys      — cyclic groups; procrastinate to the last feasible slot.
   fedbacys_odd  — FedBacys + odd-chance rule (skip every other opportunity).

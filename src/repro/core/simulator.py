@@ -6,17 +6,23 @@ parameters*); epochs are a ``lax.scan``; the slot-level energy dynamics are an
 inner scan of cheap integer ops (``repro.core.energy``); local training is a
 vmapped ``kappa``-step SGD scan.  The client axis is what shards over the
 ``data`` mesh axis at scale.
+
+The epoch body is exposed as a pure ``(carry, t) -> (carry, metrics)``
+function via :func:`make_epoch_fn`, which is what makes :func:`run_batch`
+possible: the whole epoch scan (eval included) ``vmap``s over a seed axis and
+runs a full multi-seed sweep cell as ONE jitted call (DESIGN.md §8).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import energy as energy_lib
+from repro.core import harvest as harvest_lib
 from repro.core import policies as policy_lib
 from repro.core import vaoi as vaoi_lib
 from repro.optim import sgd_update
@@ -28,7 +34,7 @@ class EHFLConfig:
     epochs: int = 500
     slots_per_epoch: int = 30  # S
     kappa: int = 20  # training cost in slots == battery units
-    p_bc: float = 0.1  # Bernoulli harvest probability
+    p_bc: float = 0.1  # mean harvest rate (Bernoulli probability, Eq. 3)
     k: int = 10  # selection budget (Alg. 2)
     mu: float = 0.5  # VAoI significance threshold
     lr: float = 0.01  # SGD gamma
@@ -39,6 +45,16 @@ class EHFLConfig:
     seed: int = 0
     eval_every: int = 10
     aux_note: str = ""
+    # harvest scenario (repro.core.harvest; "bernoulli" keeps p_bc semantics
+    # and reproduces seed behavior exactly).  harvest_params is a tuple of
+    # (name, value) pairs so the config stays frozen/hashable.
+    harvest: str = "bernoulli"
+    harvest_params: Tuple[Tuple[str, float], ...] = ()
+
+    def harvest_process(self) -> harvest_lib.HarvestProcess:
+        return harvest_lib.make_process(
+            self.harvest, p_bc=self.p_bc, **dict(self.harvest_params)
+        )
 
 
 class Backend(NamedTuple):
@@ -61,6 +77,9 @@ class EpochCarry(NamedTuple):
     pending: jax.Array  # (N,) bool
     counter: jax.Array  # (N,)
     key: jax.Array
+    # persistent HarvestProcess state (None for per-epoch-reseeded processes
+    # such as the memoryless bernoulli default — see DESIGN.md §7)
+    harvest: Any = None
 
 
 def _local_train(
@@ -101,23 +120,20 @@ def _masked_mean(stacked: Any, mask: jax.Array, fallback: Any) -> Any:
     return jax.tree.map(agg, stacked, fallback)
 
 
-def run_simulation(
-    cfg: EHFLConfig,
-    backend: Backend,
-    data: Dict[str, jax.Array],
-    use_kernel: bool = False,
-) -> Dict[str, Any]:
-    """Run T epochs of Alg. 1. Returns metric trajectories + final model."""
-    N, S, kappa = cfg.num_clients, cfg.slots_per_epoch, cfg.kappa
-    spec = policy_lib.make_policy(cfg.policy, num_clients=N, k=cfg.k)
-    key = jax.random.PRNGKey(cfg.seed)
+def init_carry(cfg: EHFLConfig, backend: Backend, seed: jax.Array | int | None = None) -> EpochCarry:
+    """Initial :class:`EpochCarry` for one simulation.  ``seed`` defaults to
+    ``cfg.seed`` and may be a traced scalar (so this vmaps over seeds)."""
+    N = cfg.num_clients
+    key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
     k_init, k_run = jax.random.split(key)
-
     global_params = backend.init(k_init)
     msg_params = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (N,) + x.shape), global_params)
-    probe_imgs = data["images"][:, : cfg.probe_size]
-
-    carry0 = EpochCarry(
+    process = cfg.harvest_process()
+    hstate = None
+    if process.persistent:
+        k_run, k_harvest = jax.random.split(k_run)
+        hstate = process.init(k_harvest, N)
+    return EpochCarry(
         global_params=global_params,
         msg_params=msg_params,
         h=jnp.zeros((N, backend.feature_dim), jnp.float32),
@@ -126,7 +142,22 @@ def run_simulation(
         pending=jnp.zeros((N,), bool),
         counter=jnp.zeros((N,), jnp.int32),
         key=k_run,
+        harvest=hstate,
     )
+
+
+def make_epoch_fn(
+    cfg: EHFLConfig,
+    backend: Backend,
+    data: Dict[str, jax.Array],
+    use_kernel: bool = False,
+) -> Callable[[EpochCarry, jax.Array], Tuple[EpochCarry, Dict[str, jax.Array]]]:
+    """One epoch of Alg. 1 as a pure ``(carry, t) -> (carry, metrics)``
+    function — scan it for a solo run, vmap the scan for a seed sweep."""
+    N, S, kappa = cfg.num_clients, cfg.slots_per_epoch, cfg.kappa
+    spec = policy_lib.make_policy(cfg.policy, num_clients=N, k=cfg.k)
+    process = cfg.harvest_process()
+    probe_imgs = data["images"][:, : cfg.probe_size]
 
     def epoch_body(carry: EpochCarry, t: jax.Array):
         k_sel, k_scan, k_train, k_next = jax.random.split(carry.key, 4)
@@ -161,9 +192,10 @@ def run_simulation(
             counter=carry.counter,
             energy_used=jnp.zeros((N,), jnp.int32),
             key=k_scan,
+            harvest=carry.harvest,  # None -> re-seeded from k_scan in scan_epoch
         )
         st = energy_lib.scan_epoch(
-            st0, S=S, kappa=kappa, p_bc=cfg.p_bc, e_max=cfg.e_max,
+            st0, S=S, kappa=kappa, e_max=cfg.e_max, process=process,
             want_fn=want_fn, count_opportunity_fn=opp_fn,
         )
 
@@ -207,13 +239,25 @@ def run_simulation(
                 pending=st.pending,
                 counter=st.counter,
                 key=k_next,
+                harvest=st.harvest if process.persistent else None,
             ),
             metrics,
         )
 
+    return epoch_body
+
+
+def run_simulation(
+    cfg: EHFLConfig,
+    backend: Backend,
+    data: Dict[str, jax.Array],
+    use_kernel: bool = False,
+) -> Dict[str, Any]:
+    """Run T epochs of Alg. 1. Returns metric trajectories + final model."""
+    epoch_body = make_epoch_fn(cfg, backend, data, use_kernel=use_kernel)
     scan_chunk = jax.jit(lambda c, ts: jax.lax.scan(epoch_body, c, ts))
 
-    carry = carry0
+    carry = init_carry(cfg, backend)
     all_metrics = []
     f1s, f1_epochs = [], []
     eval_fn = jax.jit(lambda p, x: backend.predict(p, x))
@@ -235,3 +279,71 @@ def run_simulation(
     metrics["f1_epochs"] = jnp.array(f1_epochs)
     metrics["total_energy"] = jnp.sum(metrics["energy"])
     return {"metrics": metrics, "global_params": carry.global_params, "carry": carry}
+
+
+def run_batch(
+    cfg: EHFLConfig,
+    backend: Backend,
+    data: Dict[str, jax.Array],
+    seeds: Sequence[int] | jax.Array,
+    use_kernel: bool = False,
+) -> Dict[str, Any]:
+    """Multi-seed sweep: the whole T-epoch simulation (periodic eval
+    included) vmapped over a seed axis and executed as ONE jitted call.
+
+    Seed i of the batch follows the exact same PRNG chain as
+    ``run_simulation(dataclasses.replace(cfg, seed=seeds[i]), ...)`` — the
+    slot-level integer dynamics are bit-identical; float trajectories agree
+    up to compilation-order rounding.  ``data`` is shared across seeds (the
+    standard multi-seed protocol: one partition, many scheduling runs).
+
+    Returns the same dict shape as :func:`run_simulation` with a leading
+    seed axis on every metric, ``global_params`` and ``carry`` leaf —
+    except ``metrics["f1_epochs"]``, the eval schedule, which is shared
+    across seeds and stays 1-D ``(n_evals,)``.
+    """
+    seeds = jnp.asarray(seeds, jnp.int32)
+    epoch_body = make_epoch_fn(cfg, backend, data, use_kernel=use_kernel)
+    from repro.models.cnn import macro_f1
+
+    chunk = max(1, cfg.eval_every)
+    n_full, rem = divmod(cfg.epochs, chunk)
+
+    def eval_f1(params):
+        preds = backend.predict(params, data["test_images"])
+        return macro_f1(preds, data["test_labels"], backend.num_classes)
+
+    def solo(seed):
+        carry = init_carry(cfg, backend, seed)
+        ms_parts, f1_parts = [], []
+        if n_full:
+            def chunk_body(c, i):
+                c, ms = jax.lax.scan(epoch_body, c, i * chunk + jnp.arange(chunk))
+                return c, (ms, eval_f1(c.global_params))
+
+            carry, (ms, f1s) = jax.lax.scan(chunk_body, carry, jnp.arange(n_full))
+            ms_parts.append(
+                jax.tree.map(lambda x: x.reshape((n_full * chunk,) + x.shape[2:]), ms)
+            )
+            f1_parts.append(f1s)
+        if rem:
+            carry, ms_tail = jax.lax.scan(
+                epoch_body, carry, jnp.arange(n_full * chunk, cfg.epochs)
+            )
+            ms_parts.append(ms_tail)
+            f1_parts.append(eval_f1(carry.global_params)[None])
+        metrics = (
+            jax.tree.map(lambda *xs: jnp.concatenate(xs), *ms_parts)
+            if len(ms_parts) > 1
+            else ms_parts[0]
+        )
+        metrics = dict(metrics)
+        metrics["f1"] = jnp.concatenate(f1_parts) if len(f1_parts) > 1 else f1_parts[0]
+        return carry, metrics
+
+    carries, metrics = jax.jit(jax.vmap(solo))(seeds)
+    metrics["f1_epochs"] = jnp.asarray(
+        [chunk * (i + 1) for i in range(n_full)] + ([cfg.epochs] if rem else [])
+    )
+    metrics["total_energy"] = jnp.sum(metrics["energy"], axis=-1)  # (R,)
+    return {"metrics": metrics, "global_params": carries.global_params, "carry": carries}

@@ -1,6 +1,13 @@
 import jax
 import pytest
 
+try:  # the property suites want hypothesis; fall back to the deterministic
+    import hypothesis  # noqa: F401  # stub when it isn't installed
+except ImportError:
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()
+
 jax.config.update("jax_enable_x64", False)
 
 

@@ -1,0 +1,159 @@
+"""Property tests for the harvest-scenario library (repro.core.harvest).
+
+Plain seeded-loop properties (no hypothesis dependency): battery bounds and
+energy causality through ``scan_epoch`` for every scenario, bit-identity of
+the ``bernoulli`` process with the legacy ``harvest_step``, and empirical
+arrival rates against the configured mean."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import energy as energy_lib
+from repro.core import harvest as harvest_lib
+
+
+def _slot_state(n, S, key):
+    return energy_lib.init_slot_state(n, key, S=S)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_bernoulli_bit_identical_to_harvest_step(seed):
+    """The bernoulli HarvestProcess replays the legacy harvest_step chain
+    bit-for-bit: same charges, same battery, same key sequence."""
+    p_bc, e_max = 0.3, 25
+    proc = harvest_lib.bernoulli(p_bc)
+    key = jax.random.PRNGKey(seed)
+    battery = jnp.array([0, 3, 12, 24, 25], jnp.int32)
+    state = proc.init(key, battery.shape[0])
+    for _ in range(50):
+        charge, state = proc.step(state, battery)
+        battery_ref, key = energy_lib.harvest_step(key, battery, p_bc, e_max)
+        battery = jnp.minimum(battery + charge.astype(battery.dtype), e_max)
+        assert (battery == battery_ref).all()
+        assert (state == key).all()  # key chains stay in lockstep
+
+
+@pytest.mark.parametrize("scenario", harvest_lib.SCENARIOS)
+@pytest.mark.parametrize("seed", [0, 7])
+def test_scan_epoch_invariants_per_scenario(scenario, seed):
+    """§III-C invariants hold under every arrival process: battery within
+    [0, e_max], strict causality, started clients paid >= kappa, idle paid 0."""
+    n, S, kappa, e_max = 16, 30, 8, 13
+    proc = harvest_lib.make_process(scenario, p_bc=0.4)
+    key = jax.random.PRNGKey(seed)
+    st0 = _slot_state(n, S, key)._replace(harvest=proc.init(key, n))
+    out = energy_lib.scan_epoch(
+        st0, S=S, kappa=kappa, e_max=e_max, process=proc,
+        want_fn=lambda s, st: jnp.ones((n,), bool),
+    )
+    battery = np.asarray(out.battery)
+    used = np.asarray(out.energy_used)
+    started = np.asarray(out.started)
+    assert np.all(battery >= 0) and np.all(battery <= e_max)
+    # causality: arrivals are <= 1 unit/slot in every scenario, so total
+    # consumption can never exceed S (battery = harvested - used >= 0)
+    assert np.all(used <= S)
+    assert np.all(used[started] >= kappa)
+    idle = ~started & ~np.asarray(out.uploaded) & ~np.asarray(out.pending)
+    assert np.all(used[idle] == 0)
+
+
+@pytest.mark.parametrize("scenario", harvest_lib.SCENARIOS)
+def test_charges_are_unit_quantized(scenario):
+    """Eq. 3's unit-energy quantization is preserved by every scenario."""
+    proc = harvest_lib.make_process(scenario, p_bc=0.5)
+    state = proc.init(jax.random.PRNGKey(0), 32)
+    battery = jnp.zeros((32,), jnp.int32)
+    for _ in range(20):
+        charge, state = proc.step(state, battery)
+        c = np.asarray(charge)
+        assert c.shape == (32,)
+        assert np.isin(c, [0, 1]).all()
+
+
+@pytest.mark.parametrize(
+    "scenario,p_bc,tol",
+    [
+        ("bernoulli", 0.1, 0.02),
+        ("bernoulli", 0.7, 0.02),
+        ("markov", 0.1, 0.03),
+        ("markov", 0.3, 0.03),
+        # diurnal renormalizes peak/daylight/base so the mean is exact at any
+        # rate (three regimes); measure over whole days
+        ("diurnal", 0.15, 0.03),
+        ("diurnal", 0.5, 0.03),   # widened-daylight regime
+        ("diurnal", 0.8, 0.03),   # base-rate regime (no night)
+        # hetero: client-mean of Beta(c*p, c*(1-p)) concentrates slowly; wide
+        # tolerance + many clients
+        ("hetero", 0.3, 0.06),
+    ],
+)
+def test_empirical_rate_matches_configured_mean(scenario, p_bc, tol):
+    n, steps = 256, 1920  # 1920 = 8 full diurnal days (period 240)
+    proc = harvest_lib.make_process(scenario, p_bc=p_bc)
+    battery = jnp.zeros((n,), jnp.int32)
+
+    def body(state, _):
+        charge, state = proc.step(state, battery)
+        return state, charge
+
+    _, charges = jax.lax.scan(body, proc.init(jax.random.PRNGKey(3), n), None, length=steps)
+    rate = float(np.asarray(charges, np.float64).mean())
+    assert abs(rate - p_bc) < tol, f"{scenario}: empirical {rate:.4f} vs configured {p_bc}"
+
+
+def test_markov_is_bursty():
+    """ON/OFF bursts: consecutive-slot arrival correlation far exceeds the
+    (zero) correlation of the i.i.d. bernoulli process at the same mean."""
+
+    def autocorr(proc, steps=3000, n=64):
+        battery = jnp.zeros((n,), jnp.int32)
+
+        def body(state, _):
+            charge, state = proc.step(state, battery)
+            return state, charge
+
+        _, c = jax.lax.scan(body, proc.init(jax.random.PRNGKey(0), n), None, length=steps)
+        c = np.asarray(c, np.float64)
+        a, b = c[:-1].ravel(), c[1:].ravel()
+        return float(np.corrcoef(a, b)[0, 1])
+
+    rho_markov = autocorr(harvest_lib.markov(0.2, p_on=0.8, sojourn=8.0))
+    rho_bern = autocorr(harvest_lib.bernoulli(0.2))
+    assert rho_markov > rho_bern + 0.1
+
+
+def test_diurnal_has_nights():
+    """Night slots (phase >= day_frac) harvest exactly nothing."""
+    proc = harvest_lib.diurnal(0.15, period=240.0, day_frac=0.5)
+    battery = jnp.zeros((64,), jnp.int32)
+
+    def body(state, _):
+        t = state[0]
+        charge, state = proc.step(state, battery)
+        return state, (t, charge.sum())
+
+    _, (ts, sums) = jax.lax.scan(
+        body, proc.init(jax.random.PRNGKey(0), 64), None, length=480
+    )
+    ts, sums = np.asarray(ts), np.asarray(sums)
+    night = (ts % 240) >= 120
+    assert sums[night].sum() == 0
+    assert sums[~night].sum() > 0
+
+
+def test_hetero_rates_are_heterogeneous_but_fixed():
+    proc = harvest_lib.hetero(0.3, concentration=2.0)
+    state = proc.init(jax.random.PRNGKey(0), 128)
+    rates0 = np.asarray(state[0])
+    assert rates0.std() > 0.05  # genuinely spread out
+    assert abs(rates0.mean() - 0.3) < 0.1
+    battery = jnp.zeros((128,), jnp.int32)
+    _, state = proc.step(state, battery)
+    assert (np.asarray(state[0]) == rates0).all()  # rates are static
+
+
+def test_make_process_rejects_unknown():
+    with pytest.raises(ValueError):
+        harvest_lib.make_process("solar_flare", p_bc=0.1)

@@ -1,0 +1,40 @@
+#!/usr/bin/env python
+"""Fail if any `DESIGN.md §N` reference in the source tree points at a
+section that does not exist in DESIGN.md (CI docs job; also runnable
+locally: `python tools/check_design_refs.py`)."""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "benchmarks", "examples", "tests")
+REF = re.compile(r"DESIGN\.md\s+§(\d+)")
+HEADING = re.compile(r"^#+\s+§(\d+)\b", re.M)
+
+
+def main() -> int:
+    design = REPO / "DESIGN.md"
+    if not design.exists():
+        print("FAIL: DESIGN.md does not exist")
+        return 1
+    sections = {int(n) for n in HEADING.findall(design.read_text())}
+    missing = []
+    for d in SCAN_DIRS:
+        for path in sorted((REPO / d).rglob("*.py")):
+            for i, line in enumerate(path.read_text().splitlines(), 1):
+                for n in REF.findall(line):
+                    if int(n) not in sections:
+                        missing.append(f"{path.relative_to(REPO)}:{i} -> §{n}")
+    if missing:
+        print("FAIL: dangling DESIGN.md section references:")
+        print("\n".join(f"  {m}" for m in missing))
+        print(f"DESIGN.md defines sections: {sorted(sections)}")
+        return 1
+    print(f"OK: all DESIGN.md §N references resolve (sections {sorted(sections)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
