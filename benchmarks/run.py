@@ -3,6 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV.  Default is the quick protocol
 (CPU-feasible, same structural constants as the paper); ``--full`` runs the
 3x3 (alpha x p_bc) grid at larger N/T.
+
+The ``fleet`` suite additionally writes the machine-readable
+``BENCH_fleet.json`` perf-trajectory file at the repo root (sharded-fleet
+epoch throughput over N; run ``benchmarks/fleet_bench.py`` standalone to
+sweep on 8 virtual host devices).
 """
 from __future__ import annotations
 
@@ -17,12 +22,14 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list from: fig4,fig5,fig6,roofline,kernels,ablation",
+        help="comma list from: fig4,fig5,fig6,roofline,kernels,ablation,fleet",
     )
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import ablation_mu, fig4_f1, fig5_vaoi, fig6_energy, kernels_bench, roofline
+    from benchmarks import (
+        ablation_mu, fig4_f1, fig5_vaoi, fig6_energy, fleet_bench, kernels_bench, roofline,
+    )
 
     suites = {
         "kernels": kernels_bench.run,
@@ -31,6 +38,7 @@ def main() -> None:
         "fig5": fig5_vaoi.run,
         "fig6": fig6_energy.run,
         "ablation": ablation_mu.run,
+        "fleet": fleet_bench.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
 

@@ -39,10 +39,17 @@ def main() -> None:
                     help="energy-arrival scenario (repro.core.harvest)")
     ap.add_argument("--num-seeds", type=int, default=1,
                     help=">1: vmapped multi-seed sweep in one jitted call (run_batch)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="client-sharded fleet simulator (core/fleet.py) over all "
+                         "visible devices; virtualize CPU devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8")
     ap.add_argument("--paper-scale", action="store_true",
                     help="full paper protocol: N=100, T=500, 300 samples, 32px CNN")
     ap.add_argument("--out", default="experiments/ehfl_cifar")
     args = ap.parse_args()
+    if args.fleet and args.num_seeds > 1:
+        ap.error("--fleet runs a single seed; drop --num-seeds "
+                 "(seed sweeps go through run_batch, fleets through run_fleet)")
 
     if args.paper_scale:
         args.clients, args.rounds, args.samples, args.k = 100, 500, 300, 10
@@ -69,7 +76,15 @@ def main() -> None:
     )
     backend = cnn_backend(cnn)
     t0 = time.time()
-    if args.num_seeds > 1:
+    if args.fleet:
+        from repro.core.fleet import run_fleet
+
+        out = run_fleet(cfg, backend, data)
+        wall = time.time() - t0
+        m = out["metrics"]
+        params = out["global_params"]
+        print(f"fleet: N={args.clients} sharded over {out['num_shards']} device(s)")
+    elif args.num_seeds > 1:
         seeds = [args.seed + i for i in range(args.num_seeds)]
         out = run_batch(cfg, backend, data, seeds)
         wall = time.time() - t0

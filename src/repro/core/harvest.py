@@ -62,7 +62,15 @@ class HarvestProcess(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
-def bernoulli(p_bc: float) -> HarvestProcess:
+def _shard_slice(full: jax.Array, _shard, n_loc: int) -> jax.Array:
+    """This shard's (N_loc,) window of a globally-shaped (N,) draw.
+    ``_shard = (axis_name, n_global)`` under ``shard_map`` (DESIGN.md §9)."""
+    axis_name, _ = _shard
+    off = jax.lax.axis_index(axis_name) * n_loc
+    return jax.lax.dynamic_slice(full, (off,), (n_loc,))
+
+
+def bernoulli(p_bc: float, _shard=None) -> HarvestProcess:
     """Paper-faithful i.i.d. arrivals (Eq. 3).  State is just the PRNG key;
     the split/draw sequence is bit-identical to the original
     ``energy.harvest_step``."""
@@ -72,13 +80,17 @@ def bernoulli(p_bc: float) -> HarvestProcess:
 
     def step(key: jax.Array, battery: jax.Array):
         k1, k2 = jax.random.split(key)
-        charge = jax.random.bernoulli(k1, p_bc, battery.shape).astype(jnp.int32)
-        return charge, k2
+        if _shard is None:
+            charge = jax.random.bernoulli(k1, p_bc, battery.shape)
+        else:
+            full = jax.random.bernoulli(k1, p_bc, (_shard[1],))
+            charge = _shard_slice(full, _shard, battery.shape[0])
+        return charge.astype(jnp.int32), k2
 
     return HarvestProcess("bernoulli", False, float(p_bc), init, step)
 
 
-def markov(p_bc: float, p_on: float = 0.8, sojourn: float = 8.0) -> HarvestProcess:
+def markov(p_bc: float, p_on: float = 0.8, sojourn: float = 8.0, _shard=None) -> HarvestProcess:
     """Gilbert–Elliott ON/OFF bursts.  Each client holds a binary phase z;
     arrivals occur w.p. ``p_on`` while ON and never while OFF.  The
     stationary ON-fraction pi = p_bc / p_on makes the long-run rate exactly
@@ -97,22 +109,32 @@ def markov(p_bc: float, p_on: float = 0.8, sojourn: float = 8.0) -> HarvestProce
 
     def init(key: jax.Array, n: int):
         k_z, k_run = jax.random.split(key)
-        z = jax.random.bernoulli(k_z, pi_on, (n,))
+        if _shard is None:
+            z = jax.random.bernoulli(k_z, pi_on, (n,))
+        else:
+            z = _shard_slice(jax.random.bernoulli(k_z, pi_on, (_shard[1],)), _shard, n)
         return z, k_run
 
     def step(state, battery: jax.Array):
         z, key = state
         k_arr, k_flip, k_next = jax.random.split(key, 3)
-        charge = jax.random.bernoulli(
-            k_arr, jnp.where(z, p_on, 0.0)
-        ).astype(jnp.int32)
-        flip = jax.random.bernoulli(k_flip, jnp.where(z, g2b, b2g))
+        if _shard is None:
+            charge = jax.random.bernoulli(
+                k_arr, jnp.where(z, p_on, 0.0)
+            ).astype(jnp.int32)
+            flip = jax.random.bernoulli(k_flip, jnp.where(z, g2b, b2g))
+        else:  # bernoulli(k, p) == uniform(k, p.shape, dtype(p)) < p, sliced
+            n_loc = z.shape[0]
+            u_arr = _shard_slice(jax.random.uniform(k_arr, (_shard[1],)), _shard, n_loc)
+            u_flip = _shard_slice(jax.random.uniform(k_flip, (_shard[1],)), _shard, n_loc)
+            charge = (u_arr < jnp.where(z, p_on, 0.0)).astype(jnp.int32)
+            flip = u_flip < jnp.where(z, g2b, b2g)
         return charge, (z ^ flip, k_next)
 
     return HarvestProcess("markov", True, float(p_bc), init, step)
 
 
-def diurnal(p_bc: float, period: float = 240.0, day_frac: float = 0.5) -> HarvestProcess:
+def diurnal(p_bc: float, period: float = 240.0, day_frac: float = 0.5, _shard=None) -> HarvestProcess:
     """Solar-like deterministic intensity × Bernoulli thinning.  One "day" is
     ``period`` slots; the first ``day_frac`` of it is daylight with half-sine
     intensity, the rest is night (zero arrivals).  The slot clock persists
@@ -149,13 +171,17 @@ def diurnal(p_bc: float, period: float = 240.0, day_frac: float = 0.5) -> Harves
         t, key = state
         k1, k2 = jax.random.split(key)
         p_t = base + (1.0 - base) * p_peak * intensity(t)
-        charge = jax.random.bernoulli(k1, p_t, battery.shape).astype(jnp.int32)
-        return charge, (t + 1, k2)
+        if _shard is None:
+            charge = jax.random.bernoulli(k1, p_t, battery.shape)
+        else:
+            full = jax.random.uniform(k1, (_shard[1],)) < p_t
+            charge = _shard_slice(full, _shard, battery.shape[0])
+        return charge.astype(jnp.int32), (t + 1, k2)
 
     return HarvestProcess("diurnal", True, float(p_bc), init, step)
 
 
-def hetero(p_bc: float, concentration: float = 2.0) -> HarvestProcess:
+def hetero(p_bc: float, concentration: float = 2.0, _shard=None) -> HarvestProcess:
     """Static per-client rates r_i ~ Beta(c*p_bc, c*(1-p_bc)) — mean ``p_bc``,
     spread controlled by the concentration c (small c = a few energy-rich
     clients among many starved ones; the EH-IoT deployment profile)."""
@@ -164,17 +190,24 @@ def hetero(p_bc: float, concentration: float = 2.0) -> HarvestProcess:
 
     def init(key: jax.Array, n: int):
         k_r, k_run = jax.random.split(key)
+        n_draw = n if _shard is None else _shard[1]
         if degenerate:
-            rates = jnp.full((n,), float(p_bc), jnp.float32)
+            rates = jnp.full((n_draw,), float(p_bc), jnp.float32)
         else:
-            rates = jax.random.beta(k_r, c * p_bc, c * (1.0 - p_bc), (n,))
+            rates = jax.random.beta(k_r, c * p_bc, c * (1.0 - p_bc), (n_draw,))
+        if _shard is not None:
+            rates = _shard_slice(rates, _shard, n)
         return rates.astype(jnp.float32), k_run
 
     def step(state, battery: jax.Array):
         rates, key = state
         k1, k2 = jax.random.split(key)
-        charge = jax.random.bernoulli(k1, rates).astype(jnp.int32)
-        return charge, (rates, k2)
+        if _shard is None:
+            charge = jax.random.bernoulli(k1, rates)
+        else:
+            u = _shard_slice(jax.random.uniform(k1, (_shard[1],)), _shard, rates.shape[0])
+            charge = u < rates
+        return charge.astype(jnp.int32), (rates, k2)
 
     return HarvestProcess("hetero", True, float(p_bc), init, step)
 
@@ -197,3 +230,38 @@ def make_process(name: str, p_bc: float, **params: float) -> HarvestProcess:
     if name not in _FACTORIES:
         raise ValueError(f"unknown harvest scenario {name!r}; known: {SCENARIOS}")
     return _FACTORIES[name](p_bc, **params)
+
+
+# ---------------------------------------------------------------------------
+# Client-sharded variants (fleet path, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def state_sharding_tree(name: str):
+    """Pytree matching the scenario's state structure: True where the leaf is
+    per-client (leading N axis -> shard it over the client mesh axis), False
+    where replicated (keys/clocks).  ``bernoulli`` state is just the key."""
+    return {
+        "bernoulli": False,
+        "markov": (True, False),  # (z, key)
+        "diurnal": (False, False),  # (clock, key)
+        "hetero": (True, False),  # (rates, key)
+    }[name]
+
+
+def make_sharded_process(
+    name: str, p_bc: float, *, axis_name: str, n_global: int, **params: float
+) -> HarvestProcess:
+    """Client-sharded counterpart of :func:`make_process` for the fleet path
+    (DESIGN.md §9): ``init(key, n_loc)`` / ``step(state, battery_loc)``
+    operate on this shard's (N_loc,) window under ``shard_map``, with the
+    per-client state pieces (Markov phases, hetero rates) local to the shard
+    and keys/clocks replicated — and every random draw BIT-IDENTICAL to the
+    single-device process.  The recipe: draw with the *global* shape from the
+    replicated key, then ``dynamic_slice`` this shard's window (for the
+    probability-vector draws this uses jax's documented ``bernoulli(key, p)
+    == uniform(key, p.shape, dtype(p)) < p``; asserted against the global
+    processes in ``tests/test_fleet.py``)."""
+    if name not in _FACTORIES:
+        raise ValueError(f"unknown harvest scenario {name!r}; known: {SCENARIOS}")
+    return _FACTORIES[name](p_bc, _shard=(axis_name, n_global), **params)

@@ -67,6 +67,35 @@ def epoch_selection(
     return groups == (epoch % G)
 
 
+def epoch_selection_sharded(
+    spec: PolicySpec,
+    age: jax.Array,
+    epoch: jax.Array,
+    k: int,
+    key: jax.Array,
+    *,
+    axis_name: str,
+    n_global: int,
+) -> jax.Array:
+    """:func:`epoch_selection` with the client axis sharded over ``axis_name``
+    (DESIGN.md §9): ``age`` is the local (N_loc,) shard, the returned mask is
+    local too, and the selection matches the single-device path bit-for-bit.
+    """
+    n_loc = age.shape[0]
+    if spec.name == "vaoi":
+        return vaoi_lib.select_topk_sharded(age, k, key, axis_name=axis_name, n_global=n_global)
+    if spec.name == "vaoi_soft":
+        return vaoi_lib.select_gumbel_sharded(age, k, key, axis_name=axis_name, n_global=n_global)
+    if spec.name == "fedavg":
+        return jnp.ones((n_loc,), bool)
+    # FedBacys variants: the cyclic group id is a *global* client index mod G,
+    # so the local arange is offset by this shard's position in the fleet
+    G = spec.cyclic_groups
+    off = jax.lax.axis_index(axis_name) * n_loc
+    groups = (off + jnp.arange(n_loc)) % G
+    return groups == (epoch % G)
+
+
 def make_want_fn(
     spec: PolicySpec, selected: jax.Array, S: int, kappa: int
 ) -> Callable[[jax.Array, SlotState], jax.Array]:

@@ -5,7 +5,8 @@ a leading N axis (batteries, ages, pending flags, feature moments, *and model
 parameters*); epochs are a ``lax.scan``; the slot-level energy dynamics are an
 inner scan of cheap integer ops (``repro.core.energy``); local training is a
 vmapped ``kappa``-step SGD scan.  The client axis is what shards over the
-``data`` mesh axis at scale.
+``data`` mesh axis at scale — ``repro.core.fleet.run_fleet`` runs this same
+epoch body client-sharded under ``shard_map`` (DESIGN.md §9).
 
 The epoch body is exposed as a pure ``(carry, t) -> (carry, metrics)``
 function via :func:`make_epoch_fn`, which is what makes :func:`run_batch`
@@ -41,6 +42,7 @@ class EHFLConfig:
     probe_size: int = 30  # |B_i| for the proxy forward pass
     e_max: int = 25  # kappa + 5
     policy: str = "vaoi"
+    num_groups: int = 0  # FedBacys group count G (0 = default N // k)
     alpha: float = 0.1  # Dirichlet concentration (data partition)
     seed: int = 0
     eval_every: int = 10
@@ -108,16 +110,60 @@ def _local_train(
     return params, fsum / (cfg.kappa * bs)
 
 
-def _masked_mean(stacked: Any, mask: jax.Array, fallback: Any) -> Any:
-    """FedAvg over the masked clients; fallback when no uploads."""
-    cnt = jnp.sum(mask.astype(jnp.float32))
+def _masked_mean(
+    stacked: Any, mask: jax.Array, fallback: Any, reduce_sum: Callable | None = None
+) -> Any:
+    """FedAvg over the masked clients; fallback when no uploads.
+    ``reduce_sum`` folds per-shard partial sums/counts into fleet totals
+    (the fleet path passes a psum; default identity = full client axis)."""
+    r = reduce_sum or (lambda x: x)
+    cnt = r(jnp.sum(mask.astype(jnp.float32)))
 
     def agg(leaf, fb):
         m = mask.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
-        s = jnp.sum(leaf * m, axis=0) / jnp.maximum(cnt, 1.0).astype(leaf.dtype)
+        s = r(jnp.sum(leaf * m, axis=0)) / jnp.maximum(cnt, 1.0).astype(leaf.dtype)
         return jnp.where(cnt > 0, s, fb)
 
     return jax.tree.map(agg, stacked, fallback)
+
+
+def flatten_clients(stacked: Any) -> Tuple[jax.Array, Any]:
+    """Ravel a stacked (N, ...) pytree into one (N, P) matrix + structure aux
+    (the layout the ``fedavg_reduce`` Pallas kernel consumes)."""
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    flat = jnp.concatenate([l.reshape((l.shape[0], -1)) for l in leaves], axis=1)
+    return flat, (treedef, [(l.shape[1:], l.dtype) for l in leaves])
+
+
+def unflatten_clients(vec: jax.Array, aux: Any) -> Any:
+    """Inverse of :func:`flatten_clients` for one aggregated (P,) vector."""
+    treedef, shapes = aux
+    out, i = [], 0
+    for shape, dtype in shapes:
+        size = 1
+        for d in shape:
+            size *= d
+        out.append(vec[i : i + size].reshape(shape).astype(dtype))
+        i += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _masked_mean_kernel(
+    stacked: Any, mask: jax.Array, fallback: Any, reduce_sum: Callable | None = None
+) -> Any:
+    """:func:`_masked_mean` through the ``kernels/fedavg_reduce`` Pallas
+    kernel: flatten the contrib pytree to (N, P), weighted-reduce with
+    normalized mask weights, unflatten (DESIGN.md §4).  Same ``reduce_sum``
+    hook as :func:`_masked_mean` (the fleet path reduces per shard and
+    psums the (P,) partials)."""
+    from repro.kernels import ops as kops
+
+    r = reduce_sum or (lambda x: x)
+    cnt = r(jnp.sum(mask.astype(jnp.float32)))
+    w = mask.astype(jnp.float32) / jnp.maximum(cnt, 1.0)
+    flat, aux = flatten_clients(stacked)
+    mean = unflatten_clients(r(kops.fedavg_reduce(flat, w)), aux)
+    return jax.tree.map(lambda s, fb: jnp.where(cnt > 0, s, fb), mean, fallback)
 
 
 def init_carry(cfg: EHFLConfig, backend: Backend, seed: jax.Array | int | None = None) -> EpochCarry:
@@ -146,6 +192,130 @@ def init_carry(cfg: EHFLConfig, backend: Backend, seed: jax.Array | int | None =
     )
 
 
+class EpochOps(NamedTuple):
+    """The four shard-aware points of the epoch body.  The solo defaults
+    below operate on the full client axis; ``core/fleet.py`` substitutes
+    distributed forms (psum/all-gather) so one :func:`epoch_body` serves
+    both the single-device and the client-sharded path (DESIGN.md §9)."""
+
+    select: Callable  # (spec, age, t, k, key) -> (N_loc,) mask
+    train_keys: Callable  # (k_train, n_loc) -> (n_loc, 2) per-client keys
+    masked_mean: Callable  # (contrib, mask, fallback) -> aggregated params
+    reduce_sum: Callable  # (N_loc,) -> fleet-wide scalar
+
+
+def solo_ops(cfg: EHFLConfig, use_kernel: bool = False) -> EpochOps:
+    return EpochOps(
+        select=policy_lib.epoch_selection,
+        train_keys=lambda k_train, n_loc: jax.random.split(k_train, cfg.num_clients),
+        masked_mean=_masked_mean_kernel if use_kernel else _masked_mean,
+        reduce_sum=jnp.sum,
+    )
+
+
+def epoch_body(
+    carry: EpochCarry,
+    t: jax.Array,
+    images: jax.Array,
+    labels: jax.Array,
+    *,
+    cfg: EHFLConfig,
+    backend: Backend,
+    spec: policy_lib.PolicySpec,
+    process: harvest_lib.HarvestProcess,
+    ops: EpochOps,
+    use_kernel: bool = False,
+) -> Tuple[EpochCarry, Dict[str, jax.Array]]:
+    """One epoch of Alg. 1 over the clients in ``carry`` (all N, or one
+    shard's slice when driven by ``core/fleet.py`` — ``ops`` carries the
+    only four operations that differ)."""
+    N, S, kappa = cfg.num_clients, cfg.slots_per_epoch, cfg.kappa
+    n_loc = carry.age.shape[0]
+    k_sel, k_scan, k_train, k_next = jax.random.split(carry.key, 4)
+    probe_imgs = images[:, : cfg.probe_size]
+
+    # --- CLIENTSELECT (Alg. 2) on the freshly-broadcast global model ---
+    selected = ops.select(spec, carry.age, t, cfg.k, k_sel)
+    if spec.uses_vaoi:
+        v = jax.vmap(lambda imgs: backend.feature(carry.global_params, imgs))(probe_imgs)
+        if use_kernel:  # fused Pallas kernel (Eq. 5 + Eq. 7 in one pass)
+            from repro.kernels import ops as kops
+
+            m, age = kops.vaoi_distance(
+                v, carry.h, carry.age, selected.astype(jnp.float32), cfg.mu
+            )
+        else:
+            m = vaoi_lib.feature_distance(v, carry.h)
+            age = vaoi_lib.vaoi_update(carry.age, m, selected.astype(jnp.float32), cfg.mu)
+    else:
+        age = carry.age
+        m = jnp.zeros((n_loc,), jnp.float32)
+
+    # --- slot-level energy dynamics ---
+    want_fn = policy_lib.make_want_fn(spec, selected, S, kappa)
+    opp_fn = policy_lib.make_opportunity_fn(spec, selected, S, kappa)
+    st0 = energy_lib.SlotState(
+        battery=carry.battery,
+        started=jnp.zeros((n_loc,), bool),
+        start_slot=jnp.full((n_loc,), S, jnp.int32),
+        pending=carry.pending,
+        uploaded=jnp.zeros((n_loc,), bool),
+        counter=carry.counter,
+        energy_used=jnp.zeros((n_loc,), jnp.int32),
+        key=k_scan,
+        harvest=carry.harvest,  # None -> re-seeded from k_scan in scan_epoch
+    )
+    st = energy_lib.scan_epoch(
+        st0, S=S, kappa=kappa, e_max=cfg.e_max, process=process,
+        want_fn=want_fn, count_opportunity_fn=opp_fn,
+    )
+
+    # --- local training (vmapped; masked by st.started) ---
+    pending_in = carry.pending  # entered the epoch with an unsent (old) message?
+    train_keys = ops.train_keys(k_train, n_loc)
+    trained, h_new = jax.vmap(
+        lambda imgs, lbls, k: _local_train(carry.global_params, imgs, lbls, k, cfg, backend)
+    )(images, labels, train_keys)
+    started_m = st.started
+    sel = lambda new, old: jax.tree.map(
+        lambda a, b: jnp.where(started_m.reshape((-1,) + (1,) * (a.ndim - 1)), a, b), new, old
+    )
+    msg_params = sel(trained, carry.msg_params)
+    h = jnp.where(started_m[:, None], h_new, carry.h)
+
+    # --- aggregation (uploads of this epoch; old-pending uploads use old msgs) ---
+    contrib = jax.tree.map(
+        lambda old, new: jnp.where(
+            pending_in.reshape((-1,) + (1,) * (old.ndim - 1)), old, new
+        ),
+        carry.msg_params,
+        msg_params,
+    )
+    new_global = ops.masked_mean(contrib, st.uploaded, carry.global_params)
+
+    metrics = {
+        "energy": ops.reduce_sum(st.energy_used),
+        "avg_age": ops.reduce_sum(age) / N,
+        "n_started": ops.reduce_sum(st.started.astype(jnp.int32)),
+        "n_uploaded": ops.reduce_sum(st.uploaded.astype(jnp.int32)),
+        "avg_m": ops.reduce_sum(m) / N,
+    }
+    return (
+        EpochCarry(
+            global_params=new_global,
+            msg_params=msg_params,
+            h=h,
+            age=age,
+            battery=st.battery,
+            pending=st.pending,
+            counter=st.counter,
+            key=k_next,
+            harvest=st.harvest if process.persistent else None,
+        ),
+        metrics,
+    )
+
+
 def make_epoch_fn(
     cfg: EHFLConfig,
     backend: Backend,
@@ -154,110 +324,28 @@ def make_epoch_fn(
 ) -> Callable[[EpochCarry, jax.Array], Tuple[EpochCarry, Dict[str, jax.Array]]]:
     """One epoch of Alg. 1 as a pure ``(carry, t) -> (carry, metrics)``
     function — scan it for a solo run, vmap the scan for a seed sweep."""
-    N, S, kappa = cfg.num_clients, cfg.slots_per_epoch, cfg.kappa
-    spec = policy_lib.make_policy(cfg.policy, num_clients=N, k=cfg.k)
+    spec = policy_lib.make_policy(
+        cfg.policy, num_clients=cfg.num_clients, k=cfg.k, num_groups=cfg.num_groups
+    )
     process = cfg.harvest_process()
-    probe_imgs = data["images"][:, : cfg.probe_size]
-
-    def epoch_body(carry: EpochCarry, t: jax.Array):
-        k_sel, k_scan, k_train, k_next = jax.random.split(carry.key, 4)
-
-        # --- CLIENTSELECT (Alg. 2) on the freshly-broadcast global model ---
-        if spec.uses_vaoi:
-            v = jax.vmap(lambda imgs: backend.feature(carry.global_params, imgs))(probe_imgs)
-            selected = policy_lib.epoch_selection(spec, carry.age, t, cfg.k, k_sel)
-            if use_kernel:  # fused Pallas kernel (Eq. 5 + Eq. 7 in one pass)
-                from repro.kernels import ops as kops
-
-                m, age = kops.vaoi_distance(
-                    v, carry.h, carry.age, selected.astype(jnp.float32), cfg.mu
-                )
-            else:
-                m = vaoi_lib.feature_distance(v, carry.h)
-                age = vaoi_lib.vaoi_update(carry.age, m, selected.astype(jnp.float32), cfg.mu)
-        else:
-            selected = policy_lib.epoch_selection(spec, carry.age, t, cfg.k, k_sel)
-            age = carry.age
-            m = jnp.zeros((N,), jnp.float32)
-
-        # --- slot-level energy dynamics ---
-        want_fn = policy_lib.make_want_fn(spec, selected, S, kappa)
-        opp_fn = policy_lib.make_opportunity_fn(spec, selected, S, kappa)
-        st0 = energy_lib.SlotState(
-            battery=carry.battery,
-            started=jnp.zeros((N,), bool),
-            start_slot=jnp.full((N,), S, jnp.int32),
-            pending=carry.pending,
-            uploaded=jnp.zeros((N,), bool),
-            counter=carry.counter,
-            energy_used=jnp.zeros((N,), jnp.int32),
-            key=k_scan,
-            harvest=carry.harvest,  # None -> re-seeded from k_scan in scan_epoch
-        )
-        st = energy_lib.scan_epoch(
-            st0, S=S, kappa=kappa, e_max=cfg.e_max, process=process,
-            want_fn=want_fn, count_opportunity_fn=opp_fn,
-        )
-
-        # --- local training (vmapped; masked by st.started) ---
-        pending_in = carry.pending  # entered the epoch with an unsent (old) message?
-        train_keys = jax.random.split(k_train, N)
-        trained, h_new = jax.vmap(
-            lambda imgs, lbls, k: _local_train(carry.global_params, imgs, lbls, k, cfg, backend)
-        )(data["images"], data["labels"], train_keys)
-        started_m = st.started
-        sel = lambda new, old: jax.tree.map(
-            lambda a, b: jnp.where(started_m.reshape((-1,) + (1,) * (a.ndim - 1)), a, b), new, old
-        )
-        msg_params = sel(trained, carry.msg_params)
-        h = jnp.where(started_m[:, None], h_new, carry.h)
-
-        # --- aggregation (uploads of this epoch; old-pending uploads use old msgs) ---
-        contrib = jax.tree.map(
-            lambda old, new: jnp.where(
-                pending_in.reshape((-1,) + (1,) * (old.ndim - 1)), old, new
-            ),
-            carry.msg_params,
-            msg_params,
-        )
-        new_global = _masked_mean(contrib, st.uploaded, carry.global_params)
-
-        metrics = {
-            "energy": jnp.sum(st.energy_used),
-            "avg_age": jnp.mean(age),
-            "n_started": jnp.sum(st.started.astype(jnp.int32)),
-            "n_uploaded": jnp.sum(st.uploaded.astype(jnp.int32)),
-            "avg_m": jnp.mean(m),
-        }
-        return (
-            EpochCarry(
-                global_params=new_global,
-                msg_params=msg_params,
-                h=h,
-                age=age,
-                battery=st.battery,
-                pending=st.pending,
-                counter=st.counter,
-                key=k_next,
-                harvest=st.harvest if process.persistent else None,
-            ),
-            metrics,
-        )
-
-    return epoch_body
+    ops = solo_ops(cfg, use_kernel)
+    return lambda carry, t: epoch_body(
+        carry, t, data["images"], data["labels"],
+        cfg=cfg, backend=backend, spec=spec, process=process, ops=ops,
+        use_kernel=use_kernel,
+    )
 
 
-def run_simulation(
+def drive_epochs(
+    scan_chunk: Callable,
+    carry: EpochCarry,
     cfg: EHFLConfig,
     backend: Backend,
     data: Dict[str, jax.Array],
-    use_kernel: bool = False,
 ) -> Dict[str, Any]:
-    """Run T epochs of Alg. 1. Returns metric trajectories + final model."""
-    epoch_body = make_epoch_fn(cfg, backend, data, use_kernel=use_kernel)
-    scan_chunk = jax.jit(lambda c, ts: jax.lax.scan(epoch_body, c, ts))
-
-    carry = init_carry(cfg, backend)
+    """The host loop shared by :func:`run_simulation` and ``fleet.run_fleet``:
+    scan epochs in ``eval_every`` chunks with periodic macro-F1 eval.
+    ``scan_chunk(carry, ts) -> (carry, metrics)`` hides solo vs sharded."""
     all_metrics = []
     f1s, f1_epochs = [], []
     eval_fn = jax.jit(lambda p, x: backend.predict(p, x))
@@ -279,6 +367,18 @@ def run_simulation(
     metrics["f1_epochs"] = jnp.array(f1_epochs)
     metrics["total_energy"] = jnp.sum(metrics["energy"])
     return {"metrics": metrics, "global_params": carry.global_params, "carry": carry}
+
+
+def run_simulation(
+    cfg: EHFLConfig,
+    backend: Backend,
+    data: Dict[str, jax.Array],
+    use_kernel: bool = False,
+) -> Dict[str, Any]:
+    """Run T epochs of Alg. 1. Returns metric trajectories + final model."""
+    epoch_fn = make_epoch_fn(cfg, backend, data, use_kernel=use_kernel)
+    scan_chunk = jax.jit(lambda c, ts: jax.lax.scan(epoch_fn, c, ts))
+    return drive_epochs(scan_chunk, init_carry(cfg, backend), cfg, backend, data)
 
 
 def run_batch(
@@ -303,7 +403,7 @@ def run_batch(
     across seeds and stays 1-D ``(n_evals,)``.
     """
     seeds = jnp.asarray(seeds, jnp.int32)
-    epoch_body = make_epoch_fn(cfg, backend, data, use_kernel=use_kernel)
+    epoch_fn = make_epoch_fn(cfg, backend, data, use_kernel=use_kernel)
     from repro.models.cnn import macro_f1
 
     chunk = max(1, cfg.eval_every)
@@ -318,7 +418,7 @@ def run_batch(
         ms_parts, f1_parts = [], []
         if n_full:
             def chunk_body(c, i):
-                c, ms = jax.lax.scan(epoch_body, c, i * chunk + jnp.arange(chunk))
+                c, ms = jax.lax.scan(epoch_fn, c, i * chunk + jnp.arange(chunk))
                 return c, (ms, eval_f1(c.global_params))
 
             carry, (ms, f1s) = jax.lax.scan(chunk_body, carry, jnp.arange(n_full))
@@ -328,7 +428,7 @@ def run_batch(
             f1_parts.append(f1s)
         if rem:
             carry, ms_tail = jax.lax.scan(
-                epoch_body, carry, jnp.arange(n_full * chunk, cfg.epochs)
+                epoch_fn, carry, jnp.arange(n_full * chunk, cfg.epochs)
             )
             ms_parts.append(ms_tail)
             f1_parts.append(eval_f1(carry.global_params)[None])

@@ -4,6 +4,13 @@ feature-based dissimilarity proxy M_i (Eq. 5) and Alg. 2 client selection.
 All functions are pure jnp (the Pallas kernel in ``repro.kernels`` is the
 TPU-optimized fused version of :func:`vaoi_update`; ``tests/test_kernels.py``
 asserts they agree).
+
+The ``*_sharded`` variants are the distributed forms used when the client
+axis is sharded over a mesh axis (DESIGN.md §9): each shard takes a local
+top-k of candidates, the ``2·shards·k`` (score, index) pairs are
+all-gathered, and a global top-k over the candidate set reproduces the
+single-device selection bit-for-bit (the true global top-k is always
+contained in the union of per-shard top-k sets).
 """
 from __future__ import annotations
 
@@ -52,6 +59,64 @@ def select_gumbel(age: jax.Array, k: int, key: jax.Array) -> jax.Array:
     g = jax.random.gumbel(key, (n,))
     _, idx = jax.lax.top_k(logp + g, k)
     return jnp.zeros((n,), bool).at[idx].set(True)
+
+
+def _distributed_topk(scores: jax.Array, k: int, axis_name: str) -> jax.Array:
+    """Global top-k over a client-sharded score vector -> local (N_loc,) mask.
+
+    Local top-k of kk = min(k, N_loc) candidates per shard, all-gather the
+    (score, global index) pairs, then a global top-k over the candidate set.
+    Every element of the true global top-k has local rank <= k on its own
+    shard (the orderings agree), so the candidate union is a superset.
+    Ordering by (score desc, index asc) reproduces ``lax.top_k``'s
+    lower-index tie-break exactly — the selection is bit-identical to
+    ``lax.top_k`` on the all-gathered vector.
+    """
+    n_loc = scores.shape[0]
+    shard = jax.lax.axis_index(axis_name)
+    kk = min(k, n_loc)
+    loc_scores, loc_idx = jax.lax.top_k(scores, kk)
+    cand_scores = jax.lax.all_gather(loc_scores, axis_name, tiled=True)
+    cand_idx = jax.lax.all_gather(loc_idx + shard * n_loc, axis_name, tiled=True)
+    order = jnp.lexsort((cand_idx, -cand_scores))
+    top_idx = cand_idx[order[: min(k, cand_idx.shape[0])]]
+    # scatter the selected global indices that land on this shard
+    pos = top_idx - shard * n_loc
+    pos = jnp.where((pos >= 0) & (pos < n_loc), pos, n_loc)  # OOB -> dropped
+    return jnp.zeros((n_loc,), bool).at[pos].set(True, mode="drop")
+
+
+def select_topk_sharded(
+    age: jax.Array, k: int, key: jax.Array, *, axis_name: str, n_global: int
+) -> jax.Array:
+    """Distributed Alg. 2 (:func:`select_topk` with ``age`` client-sharded).
+
+    The tie-break noise is drawn with the *global* shape from the replicated
+    key and sliced per shard, and the normalizer is a ``psum``, so scores —
+    and hence the selection — match the single-device path bit-for-bit
+    (ages are integer-valued floats: their sum is exact in any order).
+    """
+    n_loc = age.shape[0]
+    off = jax.lax.axis_index(axis_name) * n_loc
+    noise = jax.lax.dynamic_slice(
+        jax.random.uniform(key, (n_global,), minval=0.0, maxval=1e-3), (off,), (n_loc,)
+    )
+    total = jax.lax.psum(jnp.sum(age), axis_name)
+    p = jnp.where(total > 0, age / jnp.maximum(total, 1e-12), 0.0)
+    return _distributed_topk(p + noise, k, axis_name)
+
+
+def select_gumbel_sharded(
+    age: jax.Array, k: int, key: jax.Array, *, axis_name: str, n_global: int
+) -> jax.Array:
+    """Distributed :func:`select_gumbel` (same global-draw-and-slice recipe)."""
+    n_loc = age.shape[0]
+    off = jax.lax.axis_index(axis_name) * n_loc
+    logp = jnp.where(age > 0, jnp.log(jnp.maximum(age, 1e-12)), -20.0)
+    g = jax.lax.dynamic_slice(
+        jax.random.gumbel(key, (n_global,)), (off,), (n_loc,)
+    )
+    return _distributed_topk(logp + g, k, axis_name)
 
 
 def client_select(

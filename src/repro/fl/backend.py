@@ -1,4 +1,11 @@
-"""Backends binding models to the EHFL simulator."""
+"""Backends binding models to the EHFL simulator.
+
+Contract: ``init``/``grad_loss``/``feature``/``predict`` must be pure
+per-client functions of (params, batch) — the simulator vmaps them over the
+stacked client axis, and the fleet path (``core/fleet.py``, DESIGN.md §9)
+additionally runs them per client *shard* under ``shard_map``, where any
+hidden global state or collective would break the sharded/solo equivalence.
+"""
 from __future__ import annotations
 
 import jax

@@ -24,6 +24,20 @@ def make_host_mesh(model_parallel: int = 1):
     return jax.make_mesh((dp, model_parallel), ("data", "model"))
 
 
+def make_fleet_mesh(num_shards: int | None = None, *, num_clients: int | None = None):
+    """1-D client-fleet mesh, axes ("data",) — what ``core/fleet.run_fleet``
+    shards the N axis over (DESIGN.md §9).  Defaults to every visible device
+    (use ``XLA_FLAGS=--xla_force_host_platform_device_count=K`` to virtualize
+    K CPU devices).  If ``num_clients`` is given, the shard count is clamped
+    to its largest divisor so the fleet divides evenly."""
+    n = num_shards or len(jax.devices())
+    if num_clients is not None:
+        n = min(n, num_clients)
+        while num_clients % n:
+            n -= 1
+    return jax.make_mesh((n,), ("data",))
+
+
 def data_axes(mesh) -> tuple:
     """The batch-sharding axes for this mesh ((pod, data) when multi-pod)."""
     names = mesh.axis_names

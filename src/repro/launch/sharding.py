@@ -9,7 +9,10 @@ Baseline layout ("fsdp" mode, MaxText-style):
                              FSDP over "data" on d;
   * KV caches             -> batch over "data", head_dim over "model";
   * SSM states            -> batch over "data", ssm heads over "model";
-  * scheduler state (VAoI ages, batteries, feature moments) -> replicated.
+  * scheduler state (VAoI ages, batteries, feature moments, per-client
+    message stacks) -> CLIENT-SHARDED over the data axes: the leading N
+    axis is a fleet axis (``scheduler_pspec``; ``core/fleet.py`` runs the
+    whole EHFL loop in this layout — DESIGN.md §9).
 
 "tp" mode drops the FSDP factor (params replicated over "data") — the
 paper-era layout we baseline against in EXPERIMENTS.md §Perf.
@@ -156,3 +159,11 @@ def cache_shardings(cache_shape: Any, mesh, cfg: ModelConfig, batch_only: bool =
 
 def replicated(mesh):
     return NamedSharding(mesh, P())
+
+
+def scheduler_pspec(mesh) -> P:
+    """Per-client scheduler/fleet state (VAoI ages, batteries, feature
+    moments, stacked message params, client datasets): the leading N axis
+    shards over the data axes.  The global model and PRNG keys stay
+    replicated — see ``core/fleet.py`` and DESIGN.md §9."""
+    return P(data_axes(mesh))

@@ -39,6 +39,50 @@ def test_vaoi_distance_block_invariance(blocks, rng):
     np.testing.assert_allclose(a1, a2, rtol=1e-5)
 
 
+@pytest.mark.parametrize(
+    "n,f,bn,bf",
+    [
+        (100, 130, 32, 64),   # both axes pad (100->128, 130->192)
+        (10, 700, 8, 512),    # N pads within one block column
+        (33, 33, 32, 32),     # one ragged element on each axis
+        (5, 1025, 128, 512),  # bn clamps to N; F pads
+    ],
+)
+def test_vaoi_distance_padding_paths(n, f, bn, bf, rng):
+    """Pad-and-slice: N/F not multiples of the block sizes.  Padded rows
+    carry zero age/q and must not leak into the sliced outputs."""
+    ks = jax.random.split(rng, 4)
+    v = jax.random.normal(ks[0], (n, f))
+    h = jax.random.normal(ks[1], (n, f))
+    age = jax.random.randint(ks[2], (n,), 0, 9).astype(jnp.float32)
+    q = (jax.random.uniform(ks[3], (n,)) < 0.4).astype(jnp.float32)
+    m1, a1 = vaoi_distance(v, h, age, q, 0.7, block_n=bn, block_f=bf, interpret=True)
+    m2, a2 = ref.vaoi_distance_ref(v, h, age, q, 0.7)
+    assert m1.shape == (n,) and a1.shape == (n,)
+    np.testing.assert_allclose(m1, m2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(a1, a2, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "k,p,bk,bp",
+    [
+        (5, 77, 4, 32),      # both axes pad (5->8, 77->96)
+        (13, 100, 8, 64),    # ragged reduction tail
+        (3, 2049, 64, 2048), # bk clamps to K; P pads by one element
+        (65, 5, 64, 8),      # one extra K block, tiny P
+    ],
+)
+def test_fedavg_reduce_padding_paths(k, p, bk, bp, rng):
+    """Pad-and-slice on the reduction grid: zero-padded weights must not
+    contribute to the accumulator."""
+    msgs = jax.random.normal(rng, (k, p))
+    w = jax.random.uniform(jax.random.fold_in(rng, 1), (k,))
+    o1 = fedavg_reduce(msgs, w, block_k=bk, block_p=bp, interpret=True)
+    o2 = ref.fedavg_reduce_ref(msgs, w)
+    assert o1.shape == (p,)
+    np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("k,p", [(1, 128), (10, 1000), (100, 4096), (7, 333), (64, 2048)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_fedavg_reduce_sweep(k, p, dtype, rng):

@@ -9,7 +9,8 @@ import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
-SCAN_DIRS = ("src", "benchmarks", "examples", "tests")
+SCAN_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
+SCAN_DOCS = ("README.md",)  # root docs cite sections too (e.g. §8/§9)
 REF = re.compile(r"DESIGN\.md\s+§(\d+)")
 HEADING = re.compile(r"^#+\s+§(\d+)\b", re.M)
 
@@ -21,12 +22,13 @@ def main() -> int:
         return 1
     sections = {int(n) for n in HEADING.findall(design.read_text())}
     missing = []
-    for d in SCAN_DIRS:
-        for path in sorted((REPO / d).rglob("*.py")):
-            for i, line in enumerate(path.read_text().splitlines(), 1):
-                for n in REF.findall(line):
-                    if int(n) not in sections:
-                        missing.append(f"{path.relative_to(REPO)}:{i} -> §{n}")
+    paths = [p for d in SCAN_DIRS for p in sorted((REPO / d).rglob("*.py"))]
+    paths += [REPO / doc for doc in SCAN_DOCS if (REPO / doc).exists()]
+    for path in paths:
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            for n in REF.findall(line):
+                if int(n) not in sections:
+                    missing.append(f"{path.relative_to(REPO)}:{i} -> §{n}")
     if missing:
         print("FAIL: dangling DESIGN.md section references:")
         print("\n".join(f"  {m}" for m in missing))
