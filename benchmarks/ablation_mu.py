@@ -3,9 +3,8 @@ stochastic (Gumbel top-k) selection variant, at the paper's hardest cell
 (alpha=0.1, p_bc=0.1)."""
 from __future__ import annotations
 
-import dataclasses
 
-from benchmarks.ehfl_grid import BENCH_CNN, grid_settings, run_cell
+from benchmarks.ehfl_grid import BENCH_CNN, grid_settings
 
 
 def run(quick: bool = True):
@@ -13,7 +12,6 @@ def run(quick: bool = True):
     rows = []
     # mu sweep (vaoi policy)
     import json
-    from pathlib import Path
 
     import jax
     import numpy as np

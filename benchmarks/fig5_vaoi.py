@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.ehfl_grid import POLICIES, run_grid
+from benchmarks.ehfl_grid import run_grid
 
 
 def run(quick: bool = True):

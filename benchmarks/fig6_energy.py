@@ -6,7 +6,6 @@ alpha; (ii) VAoI consumes substantially less than greedy FedAvg at high
 p_bc (paper: up to 37% reduction); (iii) FedBacys-Odd is lowest."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.ehfl_grid import POLICIES, run_grid, run_scenarios
 

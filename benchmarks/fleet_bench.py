@@ -96,6 +96,9 @@ def run(quick: bool = True) -> list:
         "bench": "fleet",
         "devices": len(jax.devices()),
         "backend": jax.default_backend(),
+        # host fingerprint: tools/check_bench.py only gates throughput
+        # against a baseline measured on a comparable machine
+        "cpus": os.cpu_count(),
         "quick": quick,
         "rows": rows,
     }, indent=2))

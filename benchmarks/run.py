@@ -22,13 +22,14 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list from: fig4,fig5,fig6,roofline,kernels,ablation,fleet",
+        help="comma list from: fig4,fig5,fig6,roofline,kernels,ablation,fleet,stream",
     )
     args = ap.parse_args()
     quick = not args.full
 
     from benchmarks import (
-        ablation_mu, fig4_f1, fig5_vaoi, fig6_energy, fleet_bench, kernels_bench, roofline,
+        ablation_mu, fig4_f1, fig5_vaoi, fig6_energy, fleet_bench, kernels_bench,
+        roofline, stream_bench,
     )
 
     suites = {
@@ -39,20 +40,31 @@ def main() -> None:
         "fig6": fig6_energy.run,
         "ablation": ablation_mu.run,
         "fleet": fleet_bench.run,
+        "stream": stream_bench.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
 
     print("name,us_per_call,derived")
+    failed = []
     for name in wanted:
+        if name not in suites:
+            print(f"{name}/ERROR,0,UnknownSuite", file=sys.stderr)
+            failed.append(name)
+            continue
         t0 = time.time()
         try:
             rows = suites[name](quick=quick)
-        except Exception as e:  # keep the harness going
+        except Exception as e:  # keep the harness going, but record the failure
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            failed.append(name)
             continue
         for r in rows:
             print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
         print(f"{name}/_suite_wall,{(time.time()-t0)*1e6:.0f},ok", file=sys.stderr)
+    if failed:
+        # CI gates on this: a broken suite must fail the job, not exit 0
+        print(f"FAILED suites: {','.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ import numpy as np
 from repro.checkpoint import save_pytree
 from repro.configs.cifar_cnn import CONFIG as PAPER_CNN
 from repro.configs.cifar_cnn import CNNConfig
-from repro.core import SCENARIOS, EHFLConfig, run_batch, run_simulation
+from repro.core import SCENARIOS, STREAM_SCENARIOS, EHFLConfig, run_batch, run_simulation
 from repro.data import make_federated_dataset
 from repro.fl import cnn_backend
 
@@ -37,6 +37,12 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--harvest", default="bernoulli", choices=list(SCENARIOS),
                     help="energy-arrival scenario (repro.core.harvest)")
+    ap.add_argument("--stream", default="static", choices=list(STREAM_SCENARIOS),
+                    help="streaming-data scenario (repro.data.stream): static "
+                         "is the paper's frozen partition; drift/arrival/shift "
+                         "make client data non-stationary over epochs")
+    ap.add_argument("--stream-period", type=float, default=0.0,
+                    help="override the drift/shift period (epochs; 0 = scenario default)")
     ap.add_argument("--num-seeds", type=int, default=1,
                     help=">1: vmapped multi-seed sweep in one jitted call (run_batch)")
     ap.add_argument("--fleet", action="store_true",
@@ -61,7 +67,7 @@ def main() -> None:
 
     print(f"EHFL driver: policy={args.policy} N={args.clients} T={args.rounds} "
           f"alpha={args.alpha} p_bc={args.p_bc} harvest={args.harvest} "
-          f"cnn={cnn.conv_channels}")
+          f"stream={args.stream} cnn={cnn.conv_channels}")
     data = make_federated_dataset(
         jax.random.PRNGKey(args.seed), num_clients=args.clients,
         samples_per_client=args.samples, alpha=args.alpha, test_size=500,
@@ -72,7 +78,9 @@ def main() -> None:
         kappa=20, p_bc=args.p_bc, k=args.k, mu=args.mu, e_max=25,
         policy=args.policy, alpha=args.alpha, seed=args.seed,
         eval_every=max(args.rounds // 10, 1), probe_size=20, lr=0.01,
-        harvest=args.harvest,
+        harvest=args.harvest, stream=args.stream,
+        stream_params=(("period", args.stream_period),)
+        if args.stream_period > 0 and args.stream in ("drift", "shift") else (),
     )
     backend = cnn_backend(cnn)
     t0 = time.time()
@@ -100,7 +108,7 @@ def main() -> None:
         params = out["global_params"]
     outdir = Path(args.out)
     outdir.mkdir(parents=True, exist_ok=True)
-    tag = f"{args.policy}_{args.harvest}_a{args.alpha}_p{args.p_bc}"
+    tag = f"{args.policy}_{args.harvest}_{args.stream}_a{args.alpha}_p{args.p_bc}"
     save_pytree(params, outdir / f"{tag}_model.npz")
     (outdir / f"{tag}_metrics.json").write_text(json.dumps({
         "f1": np.asarray(m["f1"]).tolist(),

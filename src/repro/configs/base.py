@@ -9,8 +9,8 @@ dry-run (no allocation).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,7 @@
 """The paper's own client model (§V): CNN with six convolutional layers,
 three max-pooling layers, and three fully-connected layers, for CIFAR-10
 (32x32x3, 10 classes)."""
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 

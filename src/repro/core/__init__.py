@@ -11,3 +11,5 @@ from repro.core.simulator import (  # noqa: F401
     run_simulation,
 )
 from repro.core.vaoi import client_select, feature_distance, select_topk, vaoi_update  # noqa: F401
+from repro.data.stream import SCENARIOS as STREAM_SCENARIOS  # noqa: F401
+from repro.data.stream import DataStream, make_stream  # noqa: F401

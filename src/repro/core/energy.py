@@ -17,8 +17,7 @@ the mask of clients that would *like* to start training at this slot.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +37,11 @@ class SlotState(NamedTuple):
     # HarvestProcess state (DESIGN.md §7); None -> initialized from ``key``
     # inside ``scan_epoch`` (the memoryless/per-epoch-reseed path).
     harvest: Any = None
+    # DataStream state (DESIGN.md §10).  Per-epoch streams step in
+    # ``simulator.epoch_body`` before the slot scan; the field rides the
+    # scan untouched so slot-granular arrival processes can couple to the
+    # energy dynamics the way harvest state does.
+    stream: Any = None
 
 
 def harvest_step(key: jax.Array, battery: jax.Array, p_bc: float, e_max: int) -> Tuple[jax.Array, jax.Array]:

@@ -6,7 +6,7 @@ mesh's ``data`` axis (DESIGN.md §9).
 ``simulator.epoch_body`` under ``shard_map``: the global model and PRNG key
 stay replicated, while ``msg_params``, ``h``, ``age``, ``battery``,
 ``pending``, ``counter``, the client datasets, and the per-client harvest
-state live on their shard of the fleet.  Only the four :class:`EpochOps`
+and data-stream state live on their shard of the fleet.  Only the four :class:`EpochOps`
 points differ from the solo path:
 
   * Alg. 2 selection — distributed top-k (``vaoi.select_topk_sharded``):
@@ -37,6 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import harvest as harvest_lib
 from repro.core import policies as policy_lib
+from repro.data import stream as stream_lib
 from repro.core.simulator import (
     Backend,
     EHFLConfig,
@@ -96,11 +97,20 @@ def make_fleet_epoch_fn(
         cfg.harvest, p_bc=cfg.p_bc, axis_name=axis_name, n_global=cfg.num_clients,
         **dict(cfg.harvest_params),
     )
+    stream_params = dict(cfg.stream_params)
+    if cfg.stream in stream_lib.CLASS_CONDITIONED:
+        # same backend-derived class count as the solo path (init_carry
+        # builds the solo state the sharded step must be shape-compatible with)
+        stream_params.setdefault("num_classes", backend.num_classes)
+    stream = stream_lib.make_sharded_stream(
+        cfg.stream, axis_name=axis_name, n_global=cfg.num_clients,
+        **stream_params,
+    )
     ops = fleet_ops(cfg, use_kernel, axis_name)
     return lambda carry, t, images, labels: epoch_body(
         carry, t, images, labels,
         cfg=cfg, backend=backend, spec=spec, process=process, ops=ops,
-        use_kernel=use_kernel,
+        stream=stream, use_kernel=use_kernel,
     )
 
 
@@ -113,11 +123,16 @@ def _carry_pspecs(cfg: EHFLConfig, carry_struct: EpochCarry) -> EpochCarry:
     if carry_struct.harvest is not None:
         flags = harvest_lib.state_sharding_tree(cfg.harvest)
         hspec = jax.tree.map(lambda f: cl if f else rep, flags)
+    sspec = None
+    if carry_struct.stream is not None:
+        sflags = stream_lib.state_sharding_tree(cfg.stream)
+        sspec = jax.tree.map(lambda f: cl if f else rep, sflags)
     return EpochCarry(
         global_params=jax.tree.map(lambda _: rep, carry_struct.global_params),
         msg_params=jax.tree.map(lambda _: cl, carry_struct.msg_params),
         h=cl, age=cl, battery=cl, pending=cl, counter=cl, key=rep,
         harvest=hspec,
+        stream=sspec,
     )
 
 

@@ -19,6 +19,11 @@ re-seeded per epoch from the slot-scan key exactly as the seed code did —
 keeping the default scenario bit-identical to the original ``harvest_step``
 chain.
 
+The streaming-data engine (``repro/data/stream.py``, DESIGN.md §10) is this
+protocol's sibling on the data axis: per-epoch data views instead of
+per-slot energy arrivals, same init/step + persistent-state design and the
+same global-draw-and-slice sharded forms.
+
 Scenarios (all parameterized so the long-run mean arrival rate is ``p_bc``,
 making cross-scenario comparisons energy-neutral):
 

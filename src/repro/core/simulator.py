@@ -16,7 +16,6 @@ runs a full multi-seed sweep cell as ONE jitted call (DESIGN.md §8).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable, Dict, NamedTuple, Sequence, Tuple
 
 import jax
@@ -26,6 +25,7 @@ from repro.core import energy as energy_lib
 from repro.core import harvest as harvest_lib
 from repro.core import policies as policy_lib
 from repro.core import vaoi as vaoi_lib
+from repro.data import stream as stream_lib
 from repro.optim import sgd_update
 
 
@@ -52,11 +52,24 @@ class EHFLConfig:
     # (name, value) pairs so the config stays frozen/hashable.
     harvest: str = "bernoulli"
     harvest_params: Tuple[Tuple[str, float], ...] = ()
+    # streaming-data scenario (repro.data.stream; "static" is the frozen
+    # Dirichlet partition and reproduces seed behavior exactly).  Same
+    # (name, value) tuple convention as harvest_params.
+    stream: str = "static"
+    stream_params: Tuple[Tuple[str, float], ...] = ()
 
     def harvest_process(self) -> harvest_lib.HarvestProcess:
         return harvest_lib.make_process(
             self.harvest, p_bc=self.p_bc, **dict(self.harvest_params)
         )
+
+    def data_stream(self, num_classes: int | None = None) -> stream_lib.DataStream:
+        """``num_classes`` is the dataset's class count (the simulator passes
+        ``backend.num_classes``); an explicit ``stream_params`` entry wins."""
+        params = dict(self.stream_params)
+        if num_classes is not None and self.stream in stream_lib.CLASS_CONDITIONED:
+            params.setdefault("num_classes", num_classes)
+        return stream_lib.make_stream(self.stream, **params)
 
 
 class Backend(NamedTuple):
@@ -82,6 +95,9 @@ class EpochCarry(NamedTuple):
     # persistent HarvestProcess state (None for per-epoch-reseeded processes
     # such as the memoryless bernoulli default — see DESIGN.md §7)
     harvest: Any = None
+    # persistent DataStream state (None for the stateless "static" stream —
+    # see DESIGN.md §10)
+    stream: Any = None
 
 
 def _local_train(
@@ -179,6 +195,14 @@ def init_carry(cfg: EHFLConfig, backend: Backend, seed: jax.Array | int | None =
     if process.persistent:
         k_run, k_harvest = jax.random.split(k_run)
         hstate = process.init(k_harvest, N)
+    # stream state is split AFTER harvest state, so existing harvest-scenario
+    # PRNG chains are unchanged; the stateless "static" default splits
+    # nothing, keeping the seed chain bit-identical (DESIGN.md §10)
+    data_stream = cfg.data_stream(backend.num_classes)
+    sstate = None
+    if data_stream.persistent:
+        k_run, k_stream = jax.random.split(k_run)
+        sstate = data_stream.init(k_stream, N)
     return EpochCarry(
         global_params=global_params,
         msg_params=msg_params,
@@ -189,6 +213,7 @@ def init_carry(cfg: EHFLConfig, backend: Backend, seed: jax.Array | int | None =
         counter=jnp.zeros((N,), jnp.int32),
         key=k_run,
         harvest=hstate,
+        stream=sstate,
     )
 
 
@@ -224,14 +249,23 @@ def epoch_body(
     spec: policy_lib.PolicySpec,
     process: harvest_lib.HarvestProcess,
     ops: EpochOps,
+    stream: stream_lib.DataStream | None = None,
     use_kernel: bool = False,
 ) -> Tuple[EpochCarry, Dict[str, jax.Array]]:
     """One epoch of Alg. 1 over the clients in ``carry`` (all N, or one
     shard's slice when driven by ``core/fleet.py`` — ``ops`` carries the
-    only four operations that differ)."""
+    only four operations that differ).  ``images``/``labels`` are the
+    per-client sample POOLS; ``stream`` turns them into this epoch's view
+    (DESIGN.md §10; ``None`` and the "static" stream are the identity)."""
     N, S, kappa = cfg.num_clients, cfg.slots_per_epoch, cfg.kappa
     n_loc = carry.age.shape[0]
     k_sel, k_scan, k_train, k_next = jax.random.split(carry.key, 4)
+
+    # --- per-epoch data view (DataStream, DESIGN.md §10) ---
+    stream_state = carry.stream
+    if stream is not None:
+        idx, stream_state = stream.step(stream_state, t, labels)
+        images, labels = stream_lib.apply_view(idx, images, labels)
     probe_imgs = images[:, : cfg.probe_size]
 
     # --- CLIENTSELECT (Alg. 2) on the freshly-broadcast global model ---
@@ -264,6 +298,8 @@ def epoch_body(
         energy_used=jnp.zeros((n_loc,), jnp.int32),
         key=k_scan,
         harvest=carry.harvest,  # None -> re-seeded from k_scan in scan_epoch
+        stream=stream_state,  # rides the slot scan untouched (hook for
+        # slot-granular arrival processes; per-epoch streams step above)
     )
     st = energy_lib.scan_epoch(
         st0, S=S, kappa=kappa, e_max=cfg.e_max, process=process,
@@ -311,6 +347,7 @@ def epoch_body(
             counter=st.counter,
             key=k_next,
             harvest=st.harvest if process.persistent else None,
+            stream=st.stream if stream is not None and stream.persistent else None,
         ),
         metrics,
     )
@@ -328,11 +365,12 @@ def make_epoch_fn(
         cfg.policy, num_clients=cfg.num_clients, k=cfg.k, num_groups=cfg.num_groups
     )
     process = cfg.harvest_process()
+    stream = cfg.data_stream(backend.num_classes)
     ops = solo_ops(cfg, use_kernel)
     return lambda carry, t: epoch_body(
         carry, t, data["images"], data["labels"],
         cfg=cfg, backend=backend, spec=spec, process=process, ops=ops,
-        use_kernel=use_kernel,
+        stream=stream, use_kernel=use_kernel,
     )
 
 

@@ -1,3 +1,10 @@
+from repro.data.stream import (  # noqa: F401
+    SCENARIOS as STREAM_SCENARIOS,
+    DataStream,
+    apply_view,
+    make_sharded_stream,
+    make_stream,
+)
 from repro.data.synthetic import (  # noqa: F401
     dirichlet_label_partition,
     make_federated_dataset,

@@ -1,0 +1,296 @@
+"""Streaming non-IID data engine — pluggable per-epoch data views (DESIGN.md §10).
+
+The paper's protocol (§V) freezes one Dirichlet partition for all T epochs,
+so a client's local distribution never changes and the feature-based VAoI
+proxy is only ever stressed by *training* dynamics, not by *data* dynamics.
+Streaming FL (arXiv:2305.01238, arXiv:2405.12046) is the regime where
+semantics-aware scheduling must actually earn its keep: samples arrive over
+time and client distributions drift.  This module factors "what data does
+client i train on at epoch t" out of the simulator behind the same tiny
+stateful protocol as the harvest library (`repro.core.harvest`, DESIGN.md §7):
+
+  * ``init(key, n) -> state``   — per-simulation stream state;
+  * ``step(state, t, labels) -> (idx, state)`` — one epoch: ``idx`` is an
+    ``(N, n_pool)`` int32 index map into each client's sample pool (the
+    epoch's *view*), or ``None`` for the identity view.  ``labels`` is the
+    per-client pool labels ``(N, n_pool)`` (weights for label-conditioned
+    scenarios are computed from it at trace time).
+
+``apply_view`` gathers the view: ``images[i, idx[i]]`` / ``labels[i, idx[i]]``.
+Views always have the pool shape (``n_view == n_pool``), so every scenario
+trains on exactly the same per-epoch sample budget — the streaming analogue
+of the harvest gallery's mean-rate matching: compute- and energy-neutral
+cross-scenario comparisons.
+
+``persistent`` mirrors the harvest flag: ``static`` carries no state and
+consumes no PRNG key, which keeps the default configuration BIT-IDENTICAL
+to the frozen-partition seed behavior (tested in ``tests/test_stream.py``);
+the other scenarios own a key chain threaded through ``EpochCarry.stream``.
+
+Scenarios:
+
+  static   — the frozen partition (identity view, the paper's protocol).
+  drift    — each client's label mixture pi_i ~ Dir(alpha) rotates through
+             class space with period ``period`` epochs (circularly
+             interpolated, so the drift is continuous); the epoch view
+             resamples the client's pool with weights pi_i(t)[label].
+  arrival  — samples arrive over time: Bernoulli epochs-with-arrivals of
+             mean burst size ``burst`` (mean ``rate`` samples/epoch), into
+             a sliding window of the last ``window`` arrivals; the view
+             wraps over the occupied window, so early training sees few
+             distinct samples and redundancy is driven by the stream.
+  shift    — class-incremental swaps: classes are split into
+             ``num_phases`` contiguous groups and the active group swaps
+             every ``period`` epochs (clients holding no active-class
+             samples fall back to a uniform view of their pool).
+
+Client-sharded forms (``make_sharded_stream``) follow the fleet recipe of
+``harvest.make_sharded_process`` (DESIGN.md §9): every random draw keeps its
+single-device ``(n_global, ...)`` shape, computed from the replicated key,
+and each shard slices its own row window — so the fleet view is bit-identical
+to the solo view and the sharded-equivalence contract extends to streams.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SCENARIOS = ("static", "drift", "arrival", "shift")
+# scenarios whose factories take a num_classes param — the simulator injects
+# the backend's class count for these unless stream_params overrides it
+CLASS_CONDITIONED = ("drift", "shift")
+
+
+class DataStream(NamedTuple):
+    """A stateful per-epoch data-view process (see module docstring)."""
+
+    name: str
+    persistent: bool  # carries state across epochs (static does not)
+    init: Callable[[jax.Array, int], Any]
+    step: Callable[[Any, jax.Array, jax.Array], Tuple[Optional[jax.Array], Any]]
+
+
+def apply_view(idx: Optional[jax.Array], images: jax.Array, labels: jax.Array):
+    """Gather the epoch view from per-client pools; ``idx=None`` = identity."""
+    if idx is None:
+        return images, labels
+    return (
+        jax.vmap(lambda im, ix: im[ix])(images, idx),
+        jnp.take_along_axis(labels, idx, axis=1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shared machinery
+# ---------------------------------------------------------------------------
+
+
+def _shard_rows(full: jax.Array, _shard, n_loc: int) -> jax.Array:
+    """This shard's (n_loc, ...) row window of a globally-shaped draw.
+    ``_shard = (axis_name, n_global)`` under ``shard_map`` (DESIGN.md §9)."""
+    axis_name, _ = _shard
+    off = jax.lax.axis_index(axis_name) * n_loc
+    return jax.lax.dynamic_slice_in_dim(full, off, n_loc, axis=0)
+
+
+def _sample_weighted(key: jax.Array, weights: jax.Array, _shard=None) -> jax.Array:
+    """With-replacement categorical view: ``idx[i, j] ~ weights[i, :]`` via
+    per-client inverse-CDF over explicit uniforms (NOT ``random.categorical``,
+    whose internal noise shape is an implementation detail — explicit uniforms
+    make the global-draw-and-slice sharded form bit-exact by construction).
+    Rows whose weights sum to ~0 fall back to a uniform view of the pool."""
+    n_loc, n_pool = weights.shape
+    n_glob = n_loc if _shard is None else _shard[1]
+    u = jax.random.uniform(key, (n_glob, n_pool))
+    if _shard is not None:
+        u = _shard_rows(u, _shard, n_loc)
+    tot = jnp.sum(weights, axis=1, keepdims=True)
+    w = jnp.where(tot > 1e-12, weights, 1.0)
+    w = w / jnp.sum(w, axis=1, keepdims=True)
+    cdf = jnp.cumsum(w, axis=1)
+    idx = jax.vmap(lambda c, uu: jnp.searchsorted(c, uu, side="right"))(cdf, u)
+    return jnp.minimum(idx, n_pool - 1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Scenarios
+# ---------------------------------------------------------------------------
+
+
+def static(_shard=None) -> DataStream:
+    """The frozen partition: identity view, no state, no PRNG consumption —
+    bit-identical to the pre-stream simulator."""
+
+    def init(key: jax.Array, n: int):
+        return None
+
+    def step(state, t: jax.Array, labels: jax.Array):
+        return None, None
+
+    return DataStream("static", False, init, step)
+
+
+def rotate_mixture(pi: jax.Array, t: jax.Array, period: float) -> jax.Array:
+    """Circularly rotate per-client class mixtures ``pi`` (N, C) by
+    ``t * C / period`` classes, linearly interpolating fractional shifts —
+    continuous drift, periodic with period ``period`` epochs."""
+    C = pi.shape[1]
+    s = (t % period).astype(jnp.float32) * (C / period)
+    lo = jnp.floor(s).astype(jnp.int32)
+    f = s - lo.astype(jnp.float32)
+    cols = jnp.arange(C, dtype=jnp.int32)
+    return (1.0 - f) * pi[:, (cols - lo) % C] + f * pi[:, (cols - lo - 1) % C]
+
+
+def drift(
+    alpha: float = 0.5, period: float = 100.0, num_classes: float = 10, _shard=None
+) -> DataStream:
+    """Rotating per-client Dirichlet label mixtures.  Each client draws a
+    base mixture pi_i ~ Dir(alpha * 1_C) at init; at epoch t the view
+    resamples its pool with weights ``rotate_mixture(pi, t, period)[label]``.
+    Over one full period the time-averaged mixture is class-uniform, so the
+    long-run view marginal matches the client's pool composition."""
+    C = int(num_classes)
+    period = max(1.0, float(period))
+    a = max(1e-3, float(alpha))
+
+    def init(key: jax.Array, n: int):
+        k_pi, k_run = jax.random.split(key)
+        n_draw = n if _shard is None else _shard[1]
+        pi = jax.random.dirichlet(k_pi, jnp.full((C,), a), (n_draw,))
+        if _shard is not None:
+            pi = _shard_rows(pi, _shard, n)
+        return pi.astype(jnp.float32), k_run
+
+    def step(state, t: jax.Array, labels: jax.Array):
+        pi, key = state
+        k_view, k_next = jax.random.split(key)
+        mix = rotate_mixture(pi, t, period)
+        w = jnp.take_along_axis(mix, labels, axis=1)
+        return _sample_weighted(k_view, w, _shard), (pi, k_next)
+
+    return DataStream("drift", True, init, step)
+
+
+def arrival_occupancy(count: jax.Array, window: int, n_pool: int) -> jax.Array:
+    """Occupied width of the sliding window: min(arrived, window), >= 1."""
+    w = n_pool if window <= 0 else min(int(window), n_pool)
+    return jnp.clip(count, 1, w)
+
+
+def arrival(
+    rate: float = 2.0, burst: float = 1.0, window: float = 0, warm: float = 1, _shard=None
+) -> DataStream:
+    """Streaming sample arrivals into a sliding window.  Each epoch a burst
+    arrives w.p. ``rate / b`` with mean burst size ``b = max(1, burst, rate)``
+    (mean arrivals/epoch is exactly ``rate``); the client's pool is its local
+    stream source in arrival order (wrapping cyclically when exhausted), and
+    the view wraps over the most recent ``min(arrived, window)`` samples —
+    a freshly-started client trains on very few distinct samples, so update
+    redundancy is driven by the stream, not only by training.  ``warm`` (>=1)
+    samples have already arrived at t=0; ``window<=0`` means the full pool."""
+    rate = max(0.0, float(rate))
+    b = max(1.0, float(burst), rate)
+    p_burst = 0.0 if b == 0 else rate / b
+    base, frac = int(b), b - int(b)
+    window = int(window)
+    warm = max(1, int(warm))
+
+    def init(key: jax.Array, n: int):
+        return jnp.full((n,), warm, jnp.int32), key
+
+    def step(state, t: jax.Array, labels: jax.Array):
+        count, key = state
+        n_loc, n_pool = labels.shape
+        n_draw = n_loc if _shard is None else _shard[1]
+        k_hit, k_extra, k_next = jax.random.split(key, 3)
+        hit = jax.random.bernoulli(k_hit, p_burst, (n_draw,))
+        extra = jax.random.bernoulli(k_extra, frac, (n_draw,))
+        if _shard is not None:
+            hit = _shard_rows(hit, _shard, n_loc)
+            extra = _shard_rows(extra, _shard, n_loc)
+        size = base + extra.astype(jnp.int32)
+        count = count + jnp.where(hit, size, 0)
+        occ = arrival_occupancy(count, window, n_pool)
+        j = jnp.arange(n_pool, dtype=jnp.int32)[None, :]
+        idx = (count[:, None] - 1 - (j % occ[:, None])) % n_pool
+        return idx.astype(jnp.int32), (count, k_next)
+
+    return DataStream("arrival", True, init, step)
+
+
+def class_group(labels: jax.Array, num_phases: int, num_classes: int) -> jax.Array:
+    """Contiguous class group of each label: C classes -> P blocks."""
+    return (labels * num_phases) // num_classes
+
+
+def shift(
+    period: float = 50.0, num_phases: float = 2, num_classes: float = 10, _shard=None
+) -> DataStream:
+    """Class-incremental swaps at scheduled epochs: the active class group
+    ``(t // period) % num_phases`` swaps every ``period`` epochs; the view
+    resamples each client's pool restricted to active-class samples (uniform
+    fallback when a client holds none, via ``_sample_weighted``)."""
+    period = max(1, int(period))
+    P = max(1, int(num_phases))
+    C = int(num_classes)
+
+    def init(key: jax.Array, n: int):
+        return key
+
+    def step(state, t: jax.Array, labels: jax.Array):
+        key = state
+        k_view, k_next = jax.random.split(key)
+        phase = (t.astype(jnp.int32) // period) % P
+        w = (class_group(labels, P, C) == phase).astype(jnp.float32)
+        return _sample_weighted(k_view, w, _shard), k_next
+
+    return DataStream("shift", True, init, step)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_FACTORIES: dict = {
+    "static": static,
+    "drift": drift,
+    "arrival": arrival,
+    "shift": shift,
+}
+
+
+def make_stream(name: str, **params: float) -> DataStream:
+    """Build a named streaming scenario (config-side:
+    ``EHFLConfig(stream="name", stream_params=(("k", v),))``)."""
+    if name not in _FACTORIES:
+        raise ValueError(f"unknown stream scenario {name!r}; known: {SCENARIOS}")
+    return _FACTORIES[name](**params)
+
+
+def state_sharding_tree(name: str):
+    """Pytree matching the scenario's state structure: True where the leaf
+    is per-client (shard over the fleet axis), False where replicated
+    (keys).  ``static`` is stateless (None)."""
+    return {
+        "static": None,
+        "drift": (True, False),  # (pi, key)
+        "arrival": (True, False),  # (count, key)
+        "shift": False,  # key
+    }[name]
+
+
+def make_sharded_stream(
+    name: str, *, axis_name: str, n_global: int, **params: float
+) -> DataStream:
+    """Client-sharded counterpart of :func:`make_stream` for the fleet path
+    (DESIGN.md §9/§10): ``init(key, n_loc)`` / ``step(state, t, labels_loc)``
+    operate on this shard's row window under ``shard_map``, with per-client
+    state (drift mixtures, arrival counters) local to the shard and keys
+    replicated — and every random draw BIT-IDENTICAL to the single-device
+    stream via global-draw-and-slice (asserted in ``tests/test_stream.py``)."""
+    if name not in _FACTORIES:
+        raise ValueError(f"unknown stream scenario {name!r}; known: {SCENARIOS}")
+    return _FACTORIES[name](_shard=(axis_name, n_global), **params)

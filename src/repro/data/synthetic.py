@@ -7,7 +7,7 @@ exactly the paper's non-IID protocol (§V).  Smaller alpha => more skew.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ Mosaic.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.fedavg_reduce import fedavg_reduce as _fedavg_reduce

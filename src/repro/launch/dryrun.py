@@ -19,7 +19,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import INPUT_SHAPES, get_config, input_specs, list_configs
 from repro.configs.base import InputShape, ModelConfig

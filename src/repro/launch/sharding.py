@@ -10,9 +10,11 @@ Baseline layout ("fsdp" mode, MaxText-style):
   * KV caches             -> batch over "data", head_dim over "model";
   * SSM states            -> batch over "data", ssm heads over "model";
   * scheduler state (VAoI ages, batteries, feature moments, per-client
-    message stacks) -> CLIENT-SHARDED over the data axes: the leading N
-    axis is a fleet axis (``scheduler_pspec``; ``core/fleet.py`` runs the
-    whole EHFL loop in this layout — DESIGN.md §9).
+    message stacks, and per-client harvest/stream state — Markov phases,
+    drift mixtures, arrival counters) -> CLIENT-SHARDED over the data
+    axes: the leading N axis is a fleet axis (``scheduler_pspec``;
+    ``core/fleet.py`` runs the whole EHFL loop in this layout —
+    DESIGN.md §9/§10; keys and clocks stay replicated).
 
 "tp" mode drops the FSDP factor (params replicated over "data") — the
 paper-era layout we baseline against in EXPERIMENTS.md §Perf.
@@ -22,7 +24,6 @@ from __future__ import annotations
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -163,7 +164,8 @@ def replicated(mesh):
 
 def scheduler_pspec(mesh) -> P:
     """Per-client scheduler/fleet state (VAoI ages, batteries, feature
-    moments, stacked message params, client datasets): the leading N axis
-    shards over the data axes.  The global model and PRNG keys stay
-    replicated — see ``core/fleet.py`` and DESIGN.md §9."""
+    moments, stacked message params, client datasets, and the per-client
+    harvest/stream state leaves): the leading N axis shards over the data
+    axes.  The global model and PRNG keys stay replicated — see
+    ``core/fleet.py`` and DESIGN.md §9/§10."""
     return P(data_axes(mesh))

@@ -7,11 +7,9 @@ serve_step : single-token decode against the KV/SSM cache (decode shapes).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import decoder

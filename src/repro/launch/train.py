@@ -12,7 +12,6 @@ Example (CPU, reduced):
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +20,6 @@ from repro.checkpoint import save_pytree
 from repro.configs import get_config, reduced
 from repro.core import vaoi as vaoi_lib
 from repro.data import make_token_dataset
-from repro.launch.mesh import make_host_mesh
 from repro.models import decoder
 from repro.optim import sgd_update
 
@@ -54,7 +52,6 @@ def main() -> None:
     )["tokens"]  # (N, n, S)
     params = decoder.init_params(cfg, kp, max_seq=args.seq)
 
-    mesh = make_host_mesh()
 
     @jax.jit
     def local_round(params, toks):  # toks: (steps, batch, S)

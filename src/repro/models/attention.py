@@ -185,7 +185,6 @@ def attn_decode(
     capacity >= positions+1.  Cross-attention (encoder_out given) reads a
     static encoder KV (computed here; cache unused for brevity of the API).
     """
-    B = x.shape[0]
     if encoder_out is not None:
         q, k, v = _project_qkv(cfg, p, x, encoder_out)
         scores = _gqa_scores(q, k).astype(jnp.float32)
@@ -203,7 +202,6 @@ def attn_decode(
     slot = (positions % W) if rolling else jnp.minimum(positions, W - 1)
 
     def write(buf, new):
-        idx = slot[:, None, None, None]
         onehot = jax.nn.one_hot(slot, W, dtype=buf.dtype)  # (B, W)
         return buf * (1 - onehot[:, :, None, None]) + new * onehot[:, :, None, None]
 

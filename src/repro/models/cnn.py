@@ -7,7 +7,6 @@ layer (10 logits -> softmax), exactly the paper's lightweight VAoI proxy
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ compatible with jax.jit / pjit / shard_map and with stacked-parameter
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -129,7 +129,6 @@ def softmax_cross_entropy(
     logits = logits.astype(jnp.float32)
     logz = jax.nn.logsumexp(logits, axis=-1)
     if impl == "onehot":
-        vocab = logits.shape[-1]
         hit = labels[..., None] == jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
         gold = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
     else:

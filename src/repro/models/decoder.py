@@ -7,7 +7,7 @@ still scan with stacked parameters.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -112,7 +112,6 @@ def init_params(cfg: ModelConfig, key: jax.Array, max_seq: int = 4096) -> Params
         else:
             p["pos_embed"] = embed_init(ks[3], max_seq, cfg.d_model, dtype)
     if cfg.is_encoder_decoder:
-        enc_cfg = cfg  # same dims
         import dataclasses
 
         enc_stack_cfg = dataclasses.replace(cfg, num_layers=cfg.num_encoder_layers, num_experts=0)
@@ -435,7 +434,6 @@ def decode_step(
     unroll: bool = False,
 ) -> Tuple[jax.Array, Tuple]:
     """One-token decode. tokens (B,1), positions (B,) -> (logits (B,1,V), cache)."""
-    B = tokens.shape[0]
     x = params["embed"][tokens].astype(cfg.dtype)
     if "pos_embed" in params:
         x = x + params["pos_embed"][positions][:, None, :].astype(cfg.dtype)

@@ -7,7 +7,6 @@ state update.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Tuple
 
 import jax
@@ -186,7 +185,6 @@ def ssd_decode(
     di, ds, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
     zxbcdt = x[:, 0] @ p["in_proj"]  # (B, ...)
     z, xBC, dt = _split_proj(cfg, zxbcdt)
-    w = cfg.ssm_conv_width
     hist = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # (B, w, ch)
     conv = jnp.einsum("bwc,wc->bc", hist, p["conv_w"]) + p["conv_b"]
     xBC_t = jax.nn.silu(conv)

@@ -1,6 +1,5 @@
 """Data pipeline: Dirichlet partition skew + synthetic set learnability."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st

@@ -89,23 +89,26 @@ def _assert_fleet_matches_solo(cfg, backend, data, use_kernel=False):
         )
 
 
-# a latin square over (N, policy, scenario): every policy and every harvest
-# scenario runs end to end, both fleet sizes see two of each, without the
-# full 5x4x2 cross
+# a latin square over (N, policy, harvest scenario, data stream): every
+# policy, every harvest scenario, and every stream scenario runs end to end,
+# both fleet sizes see a spread of each, without the full 5x4x4x2 cross
 @pytest.mark.parametrize(
-    "n,policy,scenario",
+    "n,policy,scenario,stream",
     [
-        (16, "vaoi", "bernoulli"),
-        (16, "fedbacys", "markov"),
-        (16, "fedbacys_odd", "diurnal"),
-        (16, "vaoi_soft", "hetero"),
-        (64, "vaoi", "markov"),
-        (64, "fedbacys", "bernoulli"),
-        (64, "fedavg", "hetero"),
+        (16, "vaoi", "bernoulli", "static"),
+        (16, "fedbacys", "markov", "drift"),
+        (16, "fedbacys_odd", "diurnal", "arrival"),
+        (16, "vaoi_soft", "hetero", "shift"),
+        (64, "vaoi", "markov", "arrival"),
+        (64, "fedbacys", "bernoulli", "shift"),
+        (64, "fedavg", "hetero", "drift"),
     ],
 )
-def test_fleet_matches_solo(n, policy, scenario, worlds, backend):
-    cfg = _cfg(n, policy=policy, harvest=scenario)
+def test_fleet_matches_solo(n, policy, scenario, stream, worlds, backend):
+    cfg = _cfg(
+        n, policy=policy, harvest=scenario, stream=stream,
+        stream_params=(("period", 3.0),) if stream in ("drift", "shift") else (),
+    )
     _assert_fleet_matches_solo(cfg, backend, worlds[n])
 
 

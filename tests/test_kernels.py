@@ -122,7 +122,6 @@ def test_swa_attention_sweep(b, h, s, d, window, dtype, rng):
 def test_swa_matches_model_attention(rng):
     """The kernel agrees with the model's sliding-window attention path."""
     from repro.configs import get_config, reduced
-    from repro.models import attention
 
     cfg = reduced(get_config("starcoder2-3b"))
     assert cfg.sliding_window > 0

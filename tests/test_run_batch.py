@@ -4,7 +4,6 @@ scenario must run end-to-end through the batched path."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,5 +1,4 @@
 """End-to-end behaviour tests for the paper's system (Alg. 1)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,168 @@
+#!/usr/bin/env python
+"""Validate the machine-readable BENCH_*.json perf files and gate on fleet
+throughput regressions (the CI ``bench-smoke`` job).
+
+Checks:
+  * schema — every ``BENCH_*.json`` at the repo root is an object with
+    ``bench`` (str), ``devices`` (int > 0), ``backend`` (str), and a
+    non-empty ``rows`` list of flat dicts; every numeric value is finite
+    (NaN/inf reject) and every throughput/latency field
+    (``clients_per_s``, ``epoch_s``) is strictly positive;
+  * regression — the fresh ``BENCH_fleet.json`` is compared row-by-row
+    (matched on ``(N, shards, policy)``) against a baseline (default: the
+    committed ``git show HEAD:BENCH_fleet.json``); any ``clients_per_s``
+    drop beyond ``--max-regress`` (default 30%) fails.  Rows whose topology
+    has no baseline counterpart are skipped with a note, so local runs on
+    odd device counts don't false-alarm.  Absolute throughput is
+    machine-sensitive, so the gate only fires when the two files carry the
+    same host fingerprint (``devices``/``backend``/``cpus``); on a
+    different machine class it prints a loud note instead — commit the
+    fresh file (the CI job uploads it as an artifact) to re-arm the gate
+    for that runner class.
+
+Exit code 0 = all good; 1 = any schema violation or regression.
+
+  python tools/check_bench.py
+  python tools/check_bench.py --baseline /tmp/bench_fleet_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+THROUGHPUT_KEYS = ("clients_per_s", "epoch_s")
+
+
+def _fail(errors: list, msg: str) -> None:
+    errors.append(msg)
+    print(f"  FAIL: {msg}")
+
+
+def check_schema(path: Path, doc: object, errors: list) -> None:
+    name = path.name
+    if not isinstance(doc, dict):
+        return _fail(errors, f"{name}: top level must be an object")
+    for field, typ in (("bench", str), ("devices", int), ("backend", str), ("rows", list)):
+        if not isinstance(doc.get(field), typ):
+            _fail(errors, f"{name}: missing/invalid {field!r} (want {typ.__name__})")
+    if isinstance(doc.get("devices"), int) and doc["devices"] <= 0:
+        _fail(errors, f"{name}: devices must be > 0")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return _fail(errors, f"{name}: rows must be a non-empty list")
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            _fail(errors, f"{name}: rows[{i}] is not an object")
+            continue
+        for k, v in row.items():
+            if isinstance(v, bool):
+                continue
+            if isinstance(v, (int, float)):
+                if not math.isfinite(v):
+                    _fail(errors, f"{name}: rows[{i}].{k} is not finite ({v})")
+                elif k in THROUGHPUT_KEYS and v <= 0:
+                    _fail(errors, f"{name}: rows[{i}].{k} must be > 0 (got {v})")
+
+
+def _row_key(row: dict) -> tuple:
+    return (row.get("N"), row.get("shards"), row.get("policy"))
+
+
+def load_baseline(arg: str | None) -> dict | None:
+    """Baseline BENCH_fleet.json: an explicit path, else the committed copy."""
+    if arg:
+        return json.loads(Path(arg).read_text())
+    try:
+        blob = subprocess.run(
+            ["git", "show", "HEAD:BENCH_fleet.json"],
+            cwd=REPO, capture_output=True, text=True, check=True,
+        ).stdout
+        return json.loads(blob)
+    except (subprocess.CalledProcessError, FileNotFoundError, json.JSONDecodeError) as e:
+        print(f"  note: no committed BENCH_fleet.json baseline ({e}); "
+              "skipping regression check")
+        return None
+
+
+def comparable_hosts(fresh: dict, baseline: dict) -> bool:
+    """Throughput is only comparable across runs on the same machine class:
+    identical device count, backend, and (when both files record it) CPU
+    count.  Older baselines without ``cpus`` compare on devices/backend."""
+    for field in ("devices", "backend", "cpus"):
+        a, b = fresh.get(field), baseline.get(field)
+        if a is not None and b is not None and a != b:
+            print(f"  note: {field} differs from baseline ({a} vs {b}); host "
+                  "classes are not comparable — SKIPPING the throughput gate. "
+                  "If the runner class changed, commit the fresh "
+                  "BENCH_fleet.json (CI uploads it as an artifact) to re-arm.")
+            return False
+    return True
+
+
+def check_regression(fresh: dict, baseline: dict, max_regress: float, errors: list) -> None:
+    if not comparable_hosts(fresh, baseline):
+        return
+    base_rows = {_row_key(r): r for r in baseline.get("rows", []) if isinstance(r, dict)}
+    compared = 0
+    for row in fresh.get("rows", []):
+        key = _row_key(row)
+        base = base_rows.get(key)
+        if base is None:
+            print(f"  note: no baseline row for N={key[0]} shards={key[1]} "
+                  f"policy={key[2]}; skipping")
+            continue
+        now, ref = row.get("clients_per_s"), base.get("clients_per_s")
+        if not isinstance(now, (int, float)) or not isinstance(ref, (int, float)) or ref <= 0:
+            continue
+        compared += 1
+        drop = 1.0 - now / ref
+        status = "REGRESSION" if drop > max_regress else "ok"
+        print(f"  fleet N={key[0]} shards={key[1]}: {now:.1f} vs baseline "
+              f"{ref:.1f} clients/s ({-drop:+.1%}) {status}")
+        if drop > max_regress:
+            _fail(errors, f"BENCH_fleet.json: N={key[0]} clients_per_s regressed "
+                          f"{drop:.1%} (> {max_regress:.0%} allowed)")
+    if compared == 0:
+        print("  note: no comparable fleet rows (topology changed?); "
+              "regression check vacuous")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=None,
+                    help="baseline BENCH_fleet.json path (default: git HEAD copy)")
+    ap.add_argument("--max-regress", type=float, default=0.30,
+                    help="max tolerated fractional clients_per_s drop (default 0.30)")
+    args = ap.parse_args()
+
+    errors: list = []
+    bench_files = sorted(REPO.glob("BENCH_*.json"))
+    if not bench_files:
+        print("FAIL: no BENCH_*.json files at the repo root")
+        return 1
+    for path in bench_files:
+        print(f"checking {path.name}")
+        try:
+            doc = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            _fail(errors, f"{path.name}: invalid JSON ({e})")
+            continue
+        check_schema(path, doc, errors)
+        if path.name == "BENCH_fleet.json" and isinstance(doc, dict):
+            baseline = load_baseline(args.baseline)
+            if baseline is not None:
+                check_regression(doc, baseline, args.max_regress, errors)
+    if errors:
+        print(f"\nFAIL: {len(errors)} problem(s)")
+        return 1
+    print(f"\nOK: {len(bench_files)} bench file(s) valid, no throughput regression")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
