@@ -55,15 +55,24 @@ def _world(num_clients: int, samples: int = 8):
     return data, cnn_backend(cnn)
 
 
-def bench_one(num_clients: int, policy: str = "vaoi", reps: int = 3) -> dict:
-    """Time one jitted epoch of the sharded fleet program at this N."""
+def bench_one(
+    num_clients: int, policy: str = "vaoi", reps: int = 3, compact: bool = False
+) -> dict:
+    """Time one jitted epoch of the sharded fleet program at this N.
+
+    ``compact`` flips the active-set compaction of DESIGN.md §11: with the
+    paper's k=10 budget only the 10 scheduled clients run the kappa-step
+    SGD scan, so the dominant training FLOPs shrink ~N/k while the slot
+    dynamics/probe pass stay N-wide — the dense-vs-compact row pairs
+    measure exactly that lever."""
     from repro.core import EHFLConfig
     from repro.core.fleet import fleet_program
 
     cfg = EHFLConfig(
         num_clients=num_clients, epochs=1, slots_per_epoch=8, kappa=4,
-        p_bc=0.3, k=max(1, num_clients // 16), mu=0.5, e_max=8,
+        p_bc=0.3, k=10, mu=0.5, e_max=8,
         policy=policy, eval_every=1, probe_size=4,
+        compact="auto" if compact else False,
     )
     data, backend = _world(num_clients)
     carry, scan_chunk, sharded, mesh = fleet_program(cfg, backend, data)
@@ -81,6 +90,8 @@ def bench_one(num_clients: int, policy: str = "vaoi", reps: int = 3) -> dict:
         "N": num_clients,
         "shards": mesh.shape["data"],
         "policy": policy,
+        "compact": compact,
+        "k": cfg.k,
         "epoch_s": round(epoch_s, 4),
         "compile_s": round(compile_s, 2),
         "clients_per_s": round(num_clients / epoch_s, 1),
@@ -88,10 +99,10 @@ def bench_one(num_clients: int, policy: str = "vaoi", reps: int = 3) -> dict:
 
 
 def run(quick: bool = True) -> list:
-    """benchmarks/run.py suite entry: sweep N, write BENCH_fleet.json,
-    return the harness CSV rows."""
+    """benchmarks/run.py suite entry: sweep N x {dense, compact}, write
+    BENCH_fleet.json, return the harness CSV rows."""
     ns = (1024, 4096) if quick else (1024, 4096, 16384, 65536)
-    rows = [bench_one(n) for n in ns]
+    rows = [bench_one(n, compact=c) for n in ns for c in (False, True)]
     OUT.write_text(json.dumps({
         "bench": "fleet",
         "devices": len(jax.devices()),
@@ -104,7 +115,8 @@ def run(quick: bool = True) -> list:
     }, indent=2))
     return [
         {
-            "name": f"fleet/N{r['N']}_shards{r['shards']}",
+            "name": f"fleet/N{r['N']}_shards{r['shards']}"
+            + ("_compact" if r["compact"] else ""),
             "us_per_call": r["epoch_s"] * 1e6,
             "derived": f"{r['clients_per_s']:.0f}clients/s",
         }

@@ -37,6 +37,15 @@ def run(quick: bool = True):
     us = _time(jax.jit(ref.fedavg_reduce_ref), msgs, w)
     rows.append({"name": f"kernel/fedavg_reduce_ref/K{k}xP{p}", "us_per_call": us,
                  "derived": f"GBps={k*p*4/us/1e3:.2f}"})
+    # slab-shaped reduce: the active-set compaction path (DESIGN.md §11)
+    # aggregates a (cap, P) training slab instead of the (N, P) fleet —
+    # cap=10 is the paper's k
+    cap = 10
+    slab = jax.random.normal(key, (cap, p))
+    ws = jnp.ones((cap,)) / cap
+    us = _time(jax.jit(ref.fedavg_reduce_ref), slab, ws)
+    rows.append({"name": f"kernel/fedavg_reduce_ref/slab_K{cap}xP{p}", "us_per_call": us,
+                 "derived": f"GBps={cap*p*4/us/1e3:.2f}"})
     b, hh, s, d = (1, 4, 1024, 64) if quick else (2, 8, 4096, 128)
     qq = jax.random.normal(key, (b, hh, s, d))
     us = _time(jax.jit(lambda q_, k_, v_: ref.swa_attention_ref(q_, k_, v_, window=256)), qq, qq, qq)

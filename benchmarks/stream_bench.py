@@ -49,7 +49,10 @@ def _world(num_clients: int, samples: int):
     return data, cnn_backend(cnn)
 
 
-def bench_one(scenario: str, policy: str, data, backend, epochs: int, n: int) -> dict:
+def bench_one(
+    scenario: str, policy: str, data, backend, epochs: int, n: int,
+    compact: bool = False,
+) -> dict:
     from repro.core import EHFLConfig, run_simulation
 
     cfg = EHFLConfig(
@@ -57,6 +60,7 @@ def bench_one(scenario: str, policy: str, data, backend, epochs: int, n: int) ->
         p_bc=0.4, k=max(1, n // 4), mu=0.3, e_max=8, policy=policy,
         eval_every=epochs, probe_size=4, stream=scenario,
         stream_params=_STREAM_PARAMS[scenario],
+        compact="auto" if compact else False,
     )
     t0 = time.time()
     out = run_simulation(cfg, backend, data)
@@ -65,6 +69,7 @@ def bench_one(scenario: str, policy: str, data, backend, epochs: int, n: int) ->
     return {
         "scenario": scenario,
         "policy": policy,
+        "compact": compact,
         "epochs": epochs,
         "N": n,
         "f1": round(float(np.asarray(m["f1"])[-1]), 4),
@@ -76,18 +81,33 @@ def bench_one(scenario: str, policy: str, data, backend, epochs: int, n: int) ->
     }
 
 
+def _compacts(policy: str, n: int) -> tuple:
+    """Row variants per cell: always dense; plus a compact row when the
+    policy's slab is actually below N (fedavg auto-falls-back dense, so a
+    second identical row would be noise)."""
+    from repro.core import EHFLConfig
+    from repro.core.policies import make_policy
+    from repro.core.simulator import resolve_compact_cap
+
+    cfg = EHFLConfig(num_clients=n, k=max(1, n // 4), policy=policy)
+    spec = make_policy(policy, num_clients=n, k=cfg.k)
+    return (False, True) if resolve_compact_cap(cfg, spec) else (False,)
+
+
 def run(quick: bool = True) -> list:
-    """benchmarks/run.py suite entry: the scenario × policy grid, written to
-    BENCH_stream.json, returned as harness CSV rows."""
+    """benchmarks/run.py suite entry: the scenario × policy × {dense,
+    compact} grid, written to BENCH_stream.json, returned as harness CSV
+    rows."""
     from repro.core import STREAM_SCENARIOS
     from repro.core.policies import POLICIES
 
     n, samples, epochs = (16, 32, 8) if quick else (64, 64, 32)
     data, backend = _world(n, samples)
     rows = [
-        bench_one(sc, pol, data, backend, epochs, n)
+        bench_one(sc, pol, data, backend, epochs, n, compact=c)
         for sc in STREAM_SCENARIOS
         for pol in POLICIES
+        for c in _compacts(pol, n)
     ]
     OUT.write_text(json.dumps({
         "bench": "stream",
@@ -99,7 +119,8 @@ def run(quick: bool = True) -> list:
     }, indent=2))
     return [
         {
-            "name": f"stream/{r['scenario']}_{r['policy']}",
+            "name": f"stream/{r['scenario']}_{r['policy']}"
+            + ("_compact" if r["compact"] else ""),
             "us_per_call": r["epoch_s"] * 1e6,
             "derived": f"f1={r['f1']};age={r['avg_age_mean']};m={r['avg_m_mean']}",
         }

@@ -6,8 +6,8 @@ mesh's ``data`` axis (DESIGN.md §9).
 ``simulator.epoch_body`` under ``shard_map``: the global model and PRNG key
 stay replicated, while ``msg_params``, ``h``, ``age``, ``battery``,
 ``pending``, ``counter``, the client datasets, and the per-client harvest
-and data-stream state live on their shard of the fleet.  Only the four :class:`EpochOps`
-points differ from the solo path:
+and data-stream state live on their shard of the fleet.  Only the
+:class:`EpochOps` points differ from the solo path:
 
   * Alg. 2 selection — distributed top-k (``vaoi.select_topk_sharded``):
     local top-k per shard, all-gather the (score, index) candidate pairs,
@@ -15,7 +15,9 @@ points differ from the solo path:
   * per-client training keys — this shard's slice of the global key split;
   * FedAvg — a ``psum`` of masked per-shard sums and counts
     (``kernels/fedavg_reduce`` as the per-shard reducer under
-    ``use_kernel=True``);
+    ``use_kernel=True``); under active-set compaction (DESIGN.md §11) the
+    per-shard sums come from each shard's local ``min(cap, N_loc)``
+    training slab plus its old-carrier uploads;
   * metrics — ``psum`` scalar reductions.
 
 Correctness contract (tested in ``tests/test_fleet.py``): for any N
@@ -43,6 +45,7 @@ from repro.core.simulator import (
     EHFLConfig,
     EpochCarry,
     EpochOps,
+    _compact_mean,
     _masked_mean,
     _masked_mean_kernel,
     drive_epochs,
@@ -77,6 +80,12 @@ def fleet_ops(cfg: EHFLConfig, use_kernel: bool = False, axis_name: str = AXIS) 
         train_keys=train_keys,
         masked_mean=lambda contrib, mask, fb: agg(contrib, mask, fb, reduce_sum=psum),
         reduce_sum=lambda x: psum(jnp.sum(x)),
+        # compaction is per-shard (each shard gathers its own starters into
+        # a min(cap, N_loc) slab — DESIGN.md §11); aggregation stays a psum
+        # of slab partial sums + old-carrier partial sums
+        compact_mean=lambda slab, sm, old, om, fb: _compact_mean(
+            slab, sm, old, om, fb, reduce_sum=psum, use_kernel=use_kernel
+        ),
     )
 
 
@@ -178,6 +187,9 @@ def fleet_program(
         lambda: init_carry(cfg, backend), out_shardings=carry_shardings
     )()
 
+    # the carry is donated (its msg_params shard is still N_loc model
+    # copies per device); the data/ts args are reused across eval_every
+    # chunks, so they are deliberately NOT donated
     scan_chunk = jax.jit(
         shard_map(
             lambda c, ts, images, labels: jax.lax.scan(
@@ -187,7 +199,8 @@ def fleet_program(
             in_specs=(specs, rep, cl, cl),
             out_specs=(specs, rep),
             check_rep=False,
-        )
+        ),
+        donate_argnums=(0,),
     )
 
     cl_sharding = NamedSharding(mesh, cl)

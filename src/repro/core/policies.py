@@ -36,6 +36,13 @@ class PolicySpec:
     name: str
     uses_vaoi: bool
     cyclic_groups: int = 0  # FedBacys group count G (0 = none)
+    # static upper bound on the number of clients that can START training in
+    # any single epoch (0 = no bound below N).  Starters are a subset of the
+    # epoch_selection mask, so this is the selection mask's max popcount:
+    # k for the top-k schemes, the largest cyclic group for FedBacys, N for
+    # fedavg.  The active-set compaction path (simulator.epoch_body,
+    # DESIGN.md §11) sizes its training slab with it.
+    max_active: int = 0
 
 
 def make_policy(name: str, *, num_clients: int, k: int, num_groups: int = 0) -> PolicySpec:
@@ -43,7 +50,19 @@ def make_policy(name: str, *, num_clients: int, k: int, num_groups: int = 0) -> 
         raise ValueError(f"unknown policy {name!r}; known: {POLICIES}")
     if name in ("fedbacys", "fedbacys_odd") and num_groups == 0:
         num_groups = max(1, num_clients // max(k, 1))
-    return PolicySpec(name=name, uses_vaoi=name.startswith("vaoi"), cyclic_groups=num_groups)
+    if name in ("vaoi", "vaoi_soft"):
+        max_active = min(k, num_clients)  # Alg. 2 selects exactly k
+    elif name in ("fedbacys", "fedbacys_odd"):
+        # group g = {i : i mod G == g}; the largest has ceil(N/G) members
+        max_active = -(-num_clients // max(1, num_groups))
+    else:  # fedavg schedules everyone
+        max_active = num_clients
+    return PolicySpec(
+        name=name,
+        uses_vaoi=name.startswith("vaoi"),
+        cyclic_groups=num_groups,
+        max_active=max_active,
+    )
 
 
 def epoch_selection(

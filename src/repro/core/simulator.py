@@ -4,7 +4,11 @@ TPU-native formulation (see DESIGN.md §3): all per-client state is stacked on
 a leading N axis (batteries, ages, pending flags, feature moments, *and model
 parameters*); epochs are a ``lax.scan``; the slot-level energy dynamics are an
 inner scan of cheap integer ops (``repro.core.energy``); local training is a
-vmapped ``kappa``-step SGD scan.  The client axis is what shards over the
+vmapped ``kappa``-step SGD scan over the *active set only* — the started
+clients are gathered into a static ``PolicySpec.max_active``-sized slab, so
+per-epoch training FLOPs scale with the participating set, not the
+population (active-set compaction, DESIGN.md §11; ``compact=False`` forces
+the dense all-N path).  The client axis is what shards over the
 ``data`` mesh axis at scale — ``repro.core.fleet.run_fleet`` runs this same
 epoch body client-sharded under ``shard_map`` (DESIGN.md §9).
 
@@ -15,6 +19,7 @@ runs a full multi-seed sweep cell as ONE jitted call (DESIGN.md §8).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, NamedTuple, Sequence, Tuple
 
@@ -57,6 +62,12 @@ class EHFLConfig:
     # (name, value) tuple convention as harvest_params.
     stream: str = "static"
     stream_params: Tuple[Tuple[str, float], ...] = ()
+    # active-set compaction (DESIGN.md §11): train only the clients that
+    # actually started this epoch, gathered into a static-size slab of
+    # ``PolicySpec.max_active`` lanes.  "auto" (the default) compacts
+    # whenever the policy's slab is smaller than N (fedavg therefore always
+    # falls back to the dense path); False forces the dense path.
+    compact: Any = "auto"  # bool | "auto"
 
     def harvest_process(self) -> harvest_lib.HarvestProcess:
         return harvest_lib.make_process(
@@ -107,9 +118,15 @@ def _local_train(
     key: jax.Array,
     cfg: EHFLConfig,
     backend: Backend,
-) -> Tuple[Any, jax.Array]:
+    with_feature: bool = True,
+) -> Tuple[Any, jax.Array | None]:
     """BATCHTRAIN (Alg. 1 lines 23-29): kappa minibatch SGD steps over one
-    permutation pass; accumulates Eq. (6) historical moment."""
+    permutation pass; accumulates the Eq. (6) historical moment.
+
+    ``with_feature=False`` drops the per-step feature forward pass and
+    returns ``None`` for the moment — the Eq. 6 accumulator only exists for
+    VAoI policies, and ``backend.feature`` is a pure function of the params,
+    so skipping it leaves the SGD trajectory bit-identical."""
     n = images.shape[0]
     bs = max(1, n // cfg.kappa)
     perm = jax.random.permutation(key, n)[: cfg.kappa * bs].reshape(cfg.kappa, bs)
@@ -119,11 +136,14 @@ def _local_train(
         imgs, lbls = images[idx], labels[idx]
         _, grads = backend.grad_loss(params, imgs, lbls)
         params = sgd_update(params, grads, cfg.lr)
-        f = backend.feature(params, imgs)  # batch-mean feature of w^(t,b+1)
-        return (params, fsum + f * bs), None
+        if with_feature:
+            f = backend.feature(params, imgs)  # batch-mean feature of w^(t,b+1)
+            fsum = fsum + f * bs
+        return (params, fsum), None
 
-    (params, fsum), _ = jax.lax.scan(step, (params, jnp.zeros((backend.feature_dim,), jnp.float32)), perm)
-    return params, fsum / (cfg.kappa * bs)
+    fsum0 = jnp.zeros((backend.feature_dim,), jnp.float32) if with_feature else None
+    (params, fsum), _ = jax.lax.scan(step, (params, fsum0), perm)
+    return params, fsum / (cfg.kappa * bs) if with_feature else None
 
 
 def _masked_mean(
@@ -182,6 +202,67 @@ def _masked_mean_kernel(
     return jax.tree.map(lambda s, fb: jnp.where(cnt > 0, s, fb), mean, fallback)
 
 
+def _compact_mean(
+    slab: Any,
+    slab_mask: jax.Array,
+    old: Any,
+    old_mask: jax.Array,
+    fallback: Any,
+    reduce_sum: Callable | None = None,
+    use_kernel: bool = False,
+) -> Any:
+    """FedAvg for the compacted path (DESIGN.md §11): this epoch's fresh
+    uploads live in the ``(cap, ...)`` training slab (``slab_mask``), while
+    ``pending_in`` carriers upload their OLD message straight from the
+    N-wide ``old`` tree (``old_mask``) — their stale params were never
+    re-trained, so there is nothing to gather.  The two partial sums share
+    one count; the old-carrier pass is bandwidth-only (no training FLOPs).
+    ``reduce_sum`` folds per-shard partials into fleet totals, exactly as in
+    :func:`_masked_mean`."""
+    r = reduce_sum or (lambda x: x)
+    cnt = r(
+        jnp.sum(slab_mask.astype(jnp.float32)) + jnp.sum(old_mask.astype(jnp.float32))
+    )
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        sflat, aux = flatten_clients(slab)
+        oflat, _ = flatten_clients(old)
+        tot = r(
+            kops.fedavg_reduce(sflat, slab_mask.astype(jnp.float32))
+            + kops.fedavg_reduce(oflat, old_mask.astype(jnp.float32))
+        )
+        mean = unflatten_clients(tot / jnp.maximum(cnt, 1.0), aux)
+        return jax.tree.map(lambda s, fb: jnp.where(cnt > 0, s, fb), mean, fallback)
+
+    def agg(s_leaf, o_leaf, fb):
+        ms = slab_mask.reshape((-1,) + (1,) * (s_leaf.ndim - 1)).astype(s_leaf.dtype)
+        mo = old_mask.reshape((-1,) + (1,) * (o_leaf.ndim - 1)).astype(o_leaf.dtype)
+        tot = r(jnp.sum(s_leaf * ms, axis=0) + jnp.sum(o_leaf * mo, axis=0))
+        s = tot / jnp.maximum(cnt, 1.0).astype(s_leaf.dtype)
+        return jnp.where(cnt > 0, s, fb)
+
+    return jax.tree.map(agg, slab, old, fallback)
+
+
+def resolve_compact_cap(cfg: EHFLConfig, spec: policy_lib.PolicySpec) -> int | None:
+    """The static training-slab size for this (config, policy), or ``None``
+    for the dense path.  Compaction engages when the policy's per-epoch
+    starter bound (``PolicySpec.max_active``) is below N — ``fedavg``
+    (max_active == N) therefore always falls back dense, under "auto" AND
+    under ``compact=True`` (the slab would be the whole fleet)."""
+    # identity checks: `0 in (True, False, "auto")` is True (0 == False), so
+    # a membership test would let falsy non-bool values slip into compaction
+    if cfg.compact is False:
+        return None
+    if cfg.compact is not True and cfg.compact != "auto":
+        raise ValueError(f"compact must be True, False or 'auto'; got {cfg.compact!r}")
+    cap = spec.max_active
+    if cap <= 0 or cap >= cfg.num_clients:
+        return None
+    return cap
+
+
 def init_carry(cfg: EHFLConfig, backend: Backend, seed: jax.Array | int | None = None) -> EpochCarry:
     """Initial :class:`EpochCarry` for one simulation.  ``seed`` defaults to
     ``cfg.seed`` and may be a traced scalar (so this vmaps over seeds)."""
@@ -218,7 +299,7 @@ def init_carry(cfg: EHFLConfig, backend: Backend, seed: jax.Array | int | None =
 
 
 class EpochOps(NamedTuple):
-    """The four shard-aware points of the epoch body.  The solo defaults
+    """The five shard-aware points of the epoch body.  The solo defaults
     below operate on the full client axis; ``core/fleet.py`` substitutes
     distributed forms (psum/all-gather) so one :func:`epoch_body` serves
     both the single-device and the client-sharded path (DESIGN.md §9)."""
@@ -227,6 +308,9 @@ class EpochOps(NamedTuple):
     train_keys: Callable  # (k_train, n_loc) -> (n_loc, 2) per-client keys
     masked_mean: Callable  # (contrib, mask, fallback) -> aggregated params
     reduce_sum: Callable  # (N_loc,) -> fleet-wide scalar
+    # compacted FedAvg (DESIGN.md §11):
+    # (slab, slab_mask, old, old_mask, fallback) -> aggregated params
+    compact_mean: Callable = _compact_mean
 
 
 def solo_ops(cfg: EHFLConfig, use_kernel: bool = False) -> EpochOps:
@@ -235,6 +319,9 @@ def solo_ops(cfg: EHFLConfig, use_kernel: bool = False) -> EpochOps:
         train_keys=lambda k_train, n_loc: jax.random.split(k_train, cfg.num_clients),
         masked_mean=_masked_mean_kernel if use_kernel else _masked_mean,
         reduce_sum=jnp.sum,
+        compact_mean=lambda slab, sm, old, om, fb: _compact_mean(
+            slab, sm, old, om, fb, use_kernel=use_kernel
+        ),
     )
 
 
@@ -306,28 +393,66 @@ def epoch_body(
         want_fn=want_fn, count_opportunity_fn=opp_fn,
     )
 
-    # --- local training (vmapped; masked by st.started) ---
+    # --- local training (only VAoI policies read the Eq. 6 moment h) ---
     pending_in = carry.pending  # entered the epoch with an unsent (old) message?
     train_keys = ops.train_keys(k_train, n_loc)
-    trained, h_new = jax.vmap(
-        lambda imgs, lbls, k: _local_train(carry.global_params, imgs, lbls, k, cfg, backend)
-    )(images, labels, train_keys)
-    started_m = st.started
-    sel = lambda new, old: jax.tree.map(
-        lambda a, b: jnp.where(started_m.reshape((-1,) + (1,) * (a.ndim - 1)), a, b), new, old
+    cap = resolve_compact_cap(cfg, spec)
+    train_one = lambda imgs, lbls, k: _local_train(
+        carry.global_params, imgs, lbls, k, cfg, backend, with_feature=spec.uses_vaoi
     )
-    msg_params = sel(trained, carry.msg_params)
-    h = jnp.where(started_m[:, None], h_new, carry.h)
 
-    # --- aggregation (uploads of this epoch; old-pending uploads use old msgs) ---
-    contrib = jax.tree.map(
-        lambda old, new: jnp.where(
-            pending_in.reshape((-1,) + (1,) * (old.ndim - 1)), old, new
-        ),
-        carry.msg_params,
-        msg_params,
-    )
-    new_global = ops.masked_mean(contrib, st.uploaded, carry.global_params)
+    if cap is None:
+        # --- dense path: vmap over all clients, mask by st.started ---
+        trained, h_new = jax.vmap(train_one)(images, labels, train_keys)
+        started_m = st.started
+        sel = lambda new, old: jax.tree.map(
+            lambda a, b: jnp.where(started_m.reshape((-1,) + (1,) * (a.ndim - 1)), a, b), new, old
+        )
+        msg_params = sel(trained, carry.msg_params)
+        h = jnp.where(started_m[:, None], h_new, carry.h) if spec.uses_vaoi else carry.h
+
+        # aggregation (uploads of this epoch; old-pending uploads use old msgs)
+        contrib = jax.tree.map(
+            lambda old, new: jnp.where(
+                pending_in.reshape((-1,) + (1,) * (old.ndim - 1)), old, new
+            ),
+            carry.msg_params,
+            msg_params,
+        )
+        new_global = ops.masked_mean(contrib, st.uploaded, carry.global_params)
+    else:
+        # --- active-set compaction (DESIGN.md §11): gather the started
+        # clients into a static (cap_loc, ...) slab, train only the slab,
+        # scatter params/moments back.  Starters never exceed the slab —
+        # they are a subset of the selection mask, whose popcount
+        # ``PolicySpec.max_active`` bounds (asserted in tests/test_compact).
+        cap_loc = min(cap, n_loc)
+        # stable argsort of the ~started mask: started clients first, in
+        # ascending client order — so slab lane j is the j-th started client
+        slab_idx = jnp.argsort(~st.started)[:cap_loc]
+        slab_valid = jnp.arange(cap_loc) < jnp.sum(st.started.astype(jnp.int32))
+        trained, h_slab = jax.vmap(train_one)(
+            images[slab_idx], labels[slab_idx], train_keys[slab_idx]
+        )
+        # invalid (padding) lanes scatter out of bounds -> dropped
+        scat_idx = jnp.where(slab_valid, slab_idx, n_loc)
+        msg_params = jax.tree.map(
+            lambda mp, tr: mp.at[scat_idx].set(tr, mode="drop"), carry.msg_params, trained
+        )
+        h = (
+            carry.h.at[scat_idx].set(h_slab, mode="drop")
+            if spec.uses_vaoi
+            else carry.h
+        )
+
+        # aggregation: fresh uploads (uploaded & ~pending_in, a subset of
+        # started) reduce over the slab; pending_in carriers upload their
+        # OLD message from the N-wide msg tree (bandwidth-only pass)
+        slab_new = (st.uploaded & ~pending_in)[slab_idx] & slab_valid
+        old_mask = st.uploaded & pending_in
+        new_global = ops.compact_mean(
+            trained, slab_new, carry.msg_params, old_mask, carry.global_params
+        )
 
     metrics = {
         "energy": ops.reduce_sum(st.energy_used),
@@ -374,6 +499,18 @@ def make_epoch_fn(
     )
 
 
+@functools.lru_cache(maxsize=16)
+def _jitted_predict(predict: Callable) -> Callable:
+    """Per-``backend.predict`` jit cache: ``drive_epochs`` used to build a
+    fresh ``jax.jit(lambda ...)`` wrapper per call, so every simulation
+    re-traced eval; keying on the predict callable reuses the trace across
+    runs (and across the eval_every chunks of one run) for a long-lived
+    backend.  Bounded so freshly-built backends (each ``cnn_backend`` call
+    makes a new predict closure) evict instead of pinning their closures
+    and compiled executables forever."""
+    return jax.jit(predict)
+
+
 def drive_epochs(
     scan_chunk: Callable,
     carry: EpochCarry,
@@ -383,10 +520,13 @@ def drive_epochs(
 ) -> Dict[str, Any]:
     """The host loop shared by :func:`run_simulation` and ``fleet.run_fleet``:
     scan epochs in ``eval_every`` chunks with periodic macro-F1 eval.
-    ``scan_chunk(carry, ts) -> (carry, metrics)`` hides solo vs sharded."""
+    ``scan_chunk(carry, ts) -> (carry, metrics)`` hides solo vs sharded.
+
+    ``scan_chunk`` may donate its carry argument (both callers do): the
+    loop never reuses a carry after passing it in."""
     all_metrics = []
     f1s, f1_epochs = [], []
-    eval_fn = jax.jit(lambda p, x: backend.predict(p, x))
+    eval_fn = _jitted_predict(backend.predict)
     from repro.models.cnn import macro_f1
 
     chunk = max(1, cfg.eval_every)
@@ -415,7 +555,11 @@ def run_simulation(
 ) -> Dict[str, Any]:
     """Run T epochs of Alg. 1. Returns metric trajectories + final model."""
     epoch_fn = make_epoch_fn(cfg, backend, data, use_kernel=use_kernel)
-    scan_chunk = jax.jit(lambda c, ts: jax.lax.scan(epoch_fn, c, ts))
+    # the carry is donated: msg_params is N stacked model copies, and
+    # without donation every eval_every chunk allocates a fresh copy
+    scan_chunk = jax.jit(
+        lambda c, ts: jax.lax.scan(epoch_fn, c, ts), donate_argnums=(0,)
+    )
     return drive_epochs(scan_chunk, init_carry(cfg, backend), cfg, backend, data)
 
 

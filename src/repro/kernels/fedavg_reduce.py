@@ -41,9 +41,15 @@ def fedavg_reduce(
     block_p: int = 2048,
     interpret: bool = False,
 ) -> jax.Array:
-    """msgs: (K, P); weights: (K,) -> (P,) fp32 weighted sum."""
+    """msgs: (K, P); weights: (K,) -> (P,) fp32 weighted sum.
+
+    Handles slab-shaped inputs (small K, e.g. the ``cap``-sized active-set
+    training slab of DESIGN.md §11) as well as fleet-wide (N, P): the K
+    block is rounded up to the fp32 sublane multiple of 8 so a cap of, say,
+    10 tiles as one aligned (16, BP) block instead of a ragged (10, BP)
+    one; zero-padded rows carry zero weight and don't touch the result."""
     K, P = msgs.shape
-    bk, bp = min(block_k, K), min(block_p, P)
+    bk, bp = min(block_k, -(-K // 8) * 8), min(block_p, P)
     pad_k, pad_p = (-K) % bk, (-P) % bp
     if pad_k or pad_p:
         msgs = jnp.pad(msgs, ((0, pad_k), (0, pad_p)))

@@ -32,6 +32,9 @@ def vaoi_update(age, m_unused, q, mu):
 
 
 def fedavg_reduce(msgs, weights, **kw):
+    """Weighted (K, P) -> (P,) reduce.  K may be the full client axis N or
+    the compacted ``cap``-sized training slab (DESIGN.md §11); the kernel
+    pads small K up to the sublane multiple, so slab calls stay aligned."""
     kw.setdefault("interpret", _interpret())
     return _fedavg_reduce(msgs, weights, **kw)
 

@@ -1,0 +1,247 @@
+"""Active-set compaction (simulator.epoch_body compact branch, DESIGN.md §11).
+
+The correctness contract: with ``compact=True``/``"auto"`` the simulator
+trains only the clients that actually started this epoch (gathered into a
+static ``PolicySpec.max_active``-sized slab) and matches the dense path —
+integer slot dynamics and VAoI ages EXACTLY, float trajectories (f1, avg_m,
+params) to fp32 rounding (the slab vmap batches differently and the FedAvg
+sum order differs, both last-ulp effects; macro-F1 is an argmax metric, so
+its granularity sets the f1 tolerance — same contract as tests/test_fleet).
+
+Covered drivers: solo ``run_simulation``, the seed-vmapped ``run_batch``,
+and the client-sharded fleet (single-shard under tier-1; the CI multi-device
+leg reruns this file under XLA_FLAGS=--xla_force_host_platform_device_count=8).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.cifar_cnn import CNNConfig
+from repro.core import EHFLConfig, run_batch, run_fleet, run_simulation
+from repro.core import policies as policy_lib
+from repro.core.simulator import (
+    _local_train,
+    epoch_body,
+    init_carry,
+    resolve_compact_cap,
+    solo_ops,
+)
+from repro.data import make_federated_dataset
+from repro.fl import cnn_backend
+
+TINY_CNN = CNNConfig(
+    name="tiny", image_size=16, conv_channels=(4, 4, 8, 8, 8, 8), fc_dims=(32, 16)
+)
+N = 16
+
+
+@pytest.fixture(scope="module")
+def backend():
+    return cnn_backend(TINY_CNN)
+
+
+@pytest.fixture(scope="module")
+def world():
+    return make_federated_dataset(
+        jax.random.PRNGKey(0), num_clients=N, samples_per_client=40,
+        alpha=0.5, test_size=100, image_size=16,
+    )
+
+
+def _cfg(**kw):
+    base = dict(
+        num_clients=N, epochs=4, slots_per_epoch=12, kappa=8, p_bc=0.6,
+        k=3, mu=0.1, e_max=13, eval_every=4, probe_size=10,
+    )
+    base.update(kw)
+    return EHFLConfig(**base)
+
+
+INT_METRICS = ("energy", "n_started", "n_uploaded", "avg_age", "f1_epochs")
+INT_CARRY = ("age", "battery", "pending", "counter")
+
+
+def _assert_equiv(dense, compact, f1_atol=0.1):
+    md, mc = dense["metrics"], compact["metrics"]
+    for k in INT_METRICS:
+        np.testing.assert_array_equal(np.asarray(md[k]), np.asarray(mc[k]), err_msg=k)
+    np.testing.assert_allclose(np.asarray(md["avg_m"]), np.asarray(mc["avg_m"]), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(md["f1"]), np.asarray(mc["f1"]), atol=f1_atol)
+    for f in INT_CARRY:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(dense["carry"], f)),
+            np.asarray(getattr(compact["carry"], f)),
+            err_msg=f"carry.{f}",
+        )
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-2),
+        dense["global_params"],
+        compact["global_params"],
+    )
+
+
+# a latin square over (policy, harvest scenario, data stream): all 5 policies,
+# a spread of harvest and stream scenarios, each row exercising all three
+# drivers (solo dense vs solo/batch/fleet compact)
+@pytest.mark.parametrize(
+    "policy,scenario,stream",
+    [
+        ("vaoi", "bernoulli", "static"),
+        ("vaoi_soft", "markov", "drift"),
+        ("fedbacys", "diurnal", "arrival"),
+        ("fedbacys_odd", "hetero", "shift"),
+        ("fedavg", "bernoulli", "drift"),  # auto-dense fallback row
+    ],
+)
+def test_compact_matches_dense(policy, scenario, stream, world, backend):
+    cfg = _cfg(
+        policy=policy, harvest=scenario, stream=stream,
+        stream_params=(("period", 3.0),) if stream in ("drift", "shift") else (),
+    )
+    spec = policy_lib.make_policy(cfg.policy, num_clients=N, k=cfg.k)
+    dense = run_simulation(dataclasses.replace(cfg, compact=False), backend, world)
+    compact_cfg = dataclasses.replace(cfg, compact=True)
+
+    # cap-saturation invariant: starters can never exceed the slab
+    n_started = np.asarray(dense["metrics"]["n_started"])
+    assert (n_started <= spec.max_active).all(), (policy, n_started, spec.max_active)
+
+    solo = run_simulation(compact_cfg, backend, world)
+    _assert_equiv(dense, solo)
+
+    batch = run_batch(compact_cfg, backend, world, seeds=[cfg.seed])
+    for k in INT_METRICS[:-1]:
+        np.testing.assert_array_equal(
+            np.asarray(dense["metrics"][k]), np.asarray(batch["metrics"][k])[0], err_msg=k
+        )
+    np.testing.assert_allclose(
+        np.asarray(dense["metrics"]["f1"]), np.asarray(batch["metrics"]["f1"])[0], atol=0.1
+    )
+
+    fleet = run_fleet(compact_cfg, backend, world)
+    _assert_equiv(dense, fleet)
+
+
+def test_compact_kernel_path(world, backend):
+    """use_kernel=True routes the slab AND the old-carrier partial sums
+    through the fedavg_reduce Pallas kernel."""
+    cfg = _cfg(policy="vaoi")
+    dense = run_simulation(
+        dataclasses.replace(cfg, compact=False), backend, world, use_kernel=True
+    )
+    compact = run_simulation(
+        dataclasses.replace(cfg, compact=True), backend, world, use_kernel=True
+    )
+    _assert_equiv(dense, compact)
+
+
+def test_cap_derivation():
+    """The DESIGN.md §11 cap table: k for top-k schemes, ceil(N/G) for the
+    cyclic schemes, dense fallback (None) for fedavg — under "auto" AND
+    under an explicit compact=True."""
+    mk = lambda pol, **kw: policy_lib.make_policy(pol, num_clients=100, k=10, **kw)
+    assert mk("vaoi").max_active == 10
+    assert mk("vaoi_soft").max_active == 10
+    assert mk("fedbacys").max_active == 10  # G = N//k = 10 -> ceil(100/10)
+    assert mk("fedbacys", num_groups=3).max_active == 34  # ceil(100/3)
+    assert mk("fedbacys_odd", num_groups=7).max_active == 15
+    assert mk("fedavg").max_active == 100
+
+    cfg = EHFLConfig(num_clients=100, k=10)
+    for compact in (True, "auto"):
+        c = dataclasses.replace(cfg, compact=compact)
+        assert resolve_compact_cap(c, mk("vaoi")) == 10
+        assert resolve_compact_cap(c, mk("fedbacys", num_groups=3)) == 34
+        assert resolve_compact_cap(c, mk("fedavg")) is None  # auto-dense
+    off = dataclasses.replace(cfg, compact=False)
+    assert resolve_compact_cap(off, mk("vaoi")) is None
+    # k >= N degenerates to everyone-selected -> dense fallback too
+    wide = EHFLConfig(num_clients=8, k=8)
+    assert resolve_compact_cap(wide, policy_lib.make_policy("vaoi", num_clients=8, k=8)) is None
+    with pytest.raises(ValueError):
+        resolve_compact_cap(dataclasses.replace(cfg, compact="always"), mk("vaoi"))
+    with pytest.raises(ValueError):  # falsy-but-not-False must not slip through
+        resolve_compact_cap(dataclasses.replace(cfg, compact=0), mk("vaoi"))
+
+
+def test_selection_popcount_never_exceeds_cap(rng):
+    """The invariant the slab relies on: |epoch_selection| <= max_active for
+    every policy, epoch, and key (starters are a subset of the selection)."""
+    n, k = 24, 5
+    age = jax.random.randint(rng, (n,), 0, 7).astype(jnp.float32)
+    for policy in policy_lib.POLICIES:
+        spec = policy_lib.make_policy(policy, num_clients=n, k=k)
+        for t in range(6):
+            mask = policy_lib.epoch_selection(
+                spec, age, jnp.asarray(t), k, jax.random.fold_in(rng, 13 * t)
+            )
+            assert int(mask.sum()) <= spec.max_active, (policy, t)
+
+
+def test_fedavg_auto_dense_is_bit_identical(world, backend):
+    """fedavg under compact=True takes the dense code path, so everything —
+    floats included — is bit-identical to compact=False."""
+    cfg = _cfg(policy="fedavg", epochs=2, eval_every=2)
+    a = run_simulation(dataclasses.replace(cfg, compact=False), backend, world)
+    b = run_simulation(dataclasses.replace(cfg, compact=True), backend, world)
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x), np.asarray(y)),
+        (a["metrics"], a["global_params"]),
+        (b["metrics"], b["global_params"]),
+    )
+
+
+def test_old_carrier_uploads_bit_identical(world, backend):
+    """The pending_in fallback: clients that enter the epoch with an unsent
+    message and 1 battery unit upload their OLD message while nobody trains
+    (p_bc=0, battery < kappa).  The compact aggregation reduces those
+    carriers from the N-wide msg tree in the SAME client order as the dense
+    path, so the new global is bit-identical."""
+    cfg = _cfg(policy="vaoi", p_bc=0.0, epochs=1, eval_every=1)
+    spec = policy_lib.make_policy(cfg.policy, num_clients=N, k=cfg.k)
+    carry = init_carry(cfg, backend)
+    # distinct per-client messages; clients 3, 7, 11 carry pending uploads
+    msg = jax.tree.map(
+        lambda x: x * (1.0 + jnp.arange(N, dtype=x.dtype).reshape((N,) + (1,) * (x.ndim - 1))),
+        carry.msg_params,
+    )
+    pending = jnp.zeros((N,), bool).at[jnp.array([3, 7, 11])].set(True)
+    carry = carry._replace(
+        msg_params=msg, pending=pending, battery=pending.astype(jnp.int32)
+    )
+
+    def one_epoch(compact):
+        c = dataclasses.replace(cfg, compact=compact)
+        fn = lambda cc, t: epoch_body(
+            cc, t, world["images"], world["labels"],
+            cfg=c, backend=backend, spec=spec, process=c.harvest_process(),
+            ops=solo_ops(c), stream=None,
+        )
+        return jax.jit(fn)(carry, jnp.asarray(0))
+
+    (cd, md), (cc, mc) = one_epoch(False), one_epoch(True)
+    assert int(md["n_uploaded"]) == 3 and int(md["n_started"]) == 0
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        (md, cd.global_params, cd.msg_params, cd.h),
+        (mc, cc.global_params, cc.msg_params, cc.h),
+    )
+
+
+def test_local_train_feature_skip_is_free(world, backend):
+    """Dropping the Eq. 6 feature accumulation (non-VAoI policies) leaves
+    the SGD trajectory bit-identical and returns no moment."""
+    cfg = _cfg()
+    key = jax.random.PRNGKey(5)
+    p0 = backend.init(jax.random.PRNGKey(1))
+    imgs, lbls = world["images"][0], world["labels"][0]
+    p_with, h = _local_train(p0, imgs, lbls, key, cfg, backend, with_feature=True)
+    p_without, none = _local_train(p0, imgs, lbls, key, cfg, backend, with_feature=False)
+    assert h.shape == (backend.feature_dim,) and none is None
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        p_with, p_without,
+    )

@@ -70,7 +70,17 @@ def check_schema(path: Path, doc: object, errors: list) -> None:
 
 
 def _row_key(row: dict) -> tuple:
-    return (row.get("N"), row.get("shards"), row.get("policy"))
+    """Fleet rows are matched on topology + policy + compaction mode, so the
+    compact rows are gated against their own baseline exactly like dense
+    ones (a dense row never masks a compact regression or vice versa).
+    A missing ``compact`` field (pre-compaction baselines) normalizes to
+    False so old dense rows stay comparable to fresh dense rows."""
+    return (
+        row.get("N"),
+        row.get("shards"),
+        row.get("policy"),
+        bool(row.get("compact", False)),
+    )
 
 
 def load_baseline(arg: str | None) -> dict | None:
@@ -114,7 +124,7 @@ def check_regression(fresh: dict, baseline: dict, max_regress: float, errors: li
         base = base_rows.get(key)
         if base is None:
             print(f"  note: no baseline row for N={key[0]} shards={key[1]} "
-                  f"policy={key[2]}; skipping")
+                  f"policy={key[2]} compact={key[3]}; skipping")
             continue
         now, ref = row.get("clients_per_s"), base.get("clients_per_s")
         if not isinstance(now, (int, float)) or not isinstance(ref, (int, float)) or ref <= 0:
@@ -122,11 +132,12 @@ def check_regression(fresh: dict, baseline: dict, max_regress: float, errors: li
         compared += 1
         drop = 1.0 - now / ref
         status = "REGRESSION" if drop > max_regress else "ok"
-        print(f"  fleet N={key[0]} shards={key[1]}: {now:.1f} vs baseline "
-              f"{ref:.1f} clients/s ({-drop:+.1%}) {status}")
+        print(f"  fleet N={key[0]} shards={key[1]} compact={key[3]}: {now:.1f} "
+              f"vs baseline {ref:.1f} clients/s ({-drop:+.1%}) {status}")
         if drop > max_regress:
-            _fail(errors, f"BENCH_fleet.json: N={key[0]} clients_per_s regressed "
-                          f"{drop:.1%} (> {max_regress:.0%} allowed)")
+            _fail(errors, f"BENCH_fleet.json: N={key[0]} compact={key[3]} "
+                          f"clients_per_s regressed {drop:.1%} "
+                          f"(> {max_regress:.0%} allowed)")
     if compared == 0:
         print("  note: no comparable fleet rows (topology changed?); "
               "regression check vacuous")
