@@ -4,16 +4,40 @@ Prints ``name,us_per_call,derived`` CSV.  Default is the quick protocol
 (CPU-feasible, same structural constants as the paper); ``--full`` runs the
 3x3 (alpha x p_bc) grid at larger N/T.
 
-The ``fleet`` suite additionally writes the machine-readable
-``BENCH_fleet.json`` perf-trajectory file at the repo root (sharded-fleet
-epoch throughput over N; run ``benchmarks/fleet_bench.py`` standalone to
-sweep on 8 virtual host devices).
+The ``fleet``, ``stream``, and ``channel`` suites additionally write
+machine-readable ``BENCH_*.json`` perf-trajectory files at the repo root
+(validated by ``tools/check_bench.py``).
+
+Every suite runs under a wall-clock watchdog (``--suite-timeout``, default
+900 s): a suite that hangs — a deadlocked collective, a runaway compile —
+kills the harness with exit 1 instead of wedging CI until the job-level
+timeout reaps it with no attribution.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
+import threading
 import time
+
+
+def _watchdog(suite: str, timeout_s: float) -> threading.Timer:
+    """Arm a wall-clock kill switch for one suite.  ``os._exit`` (not
+    ``sys.exit``) so a C-level hang inside XLA can't swallow the exit —
+    a watchdog that raises in a side thread would be silently dropped."""
+
+    def _kill() -> None:
+        print(
+            f"{suite}/TIMEOUT,0,exceeded {timeout_s:.0f}s wall clock",
+            file=sys.stderr, flush=True,
+        )
+        os._exit(1)
+
+    t = threading.Timer(timeout_s, _kill)
+    t.daemon = True
+    t.start()
+    return t
 
 
 def main() -> None:
@@ -22,14 +46,19 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma list from: fig4,fig5,fig6,roofline,kernels,ablation,fleet,stream",
+        help="comma list from: fig4,fig5,fig6,roofline,kernels,ablation,fleet,stream,channel",
+    )
+    ap.add_argument(
+        "--suite-timeout", type=float, default=900.0,
+        help="per-suite wall-clock limit in seconds; a suite that exceeds it "
+        "fails the harness (exit 1) instead of hanging",
     )
     args = ap.parse_args()
     quick = not args.full
 
     from benchmarks import (
-        ablation_mu, fig4_f1, fig5_vaoi, fig6_energy, fleet_bench, kernels_bench,
-        roofline, stream_bench,
+        ablation_mu, channel_bench, fig4_f1, fig5_vaoi, fig6_energy,
+        fleet_bench, kernels_bench, roofline, stream_bench,
     )
 
     suites = {
@@ -41,6 +70,7 @@ def main() -> None:
         "ablation": ablation_mu.run,
         "fleet": fleet_bench.run,
         "stream": stream_bench.run,
+        "channel": channel_bench.run,
     }
     wanted = args.only.split(",") if args.only else list(suites)
 
@@ -52,12 +82,15 @@ def main() -> None:
             failed.append(name)
             continue
         t0 = time.time()
+        watchdog = _watchdog(name, args.suite_timeout)
         try:
             rows = suites[name](quick=quick)
         except Exception as e:  # keep the harness going, but record the failure
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
             failed.append(name)
             continue
+        finally:
+            watchdog.cancel()
         for r in rows:
             print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
         print(f"{name}/_suite_wall,{(time.time()-t0)*1e6:.0f},ok", file=sys.stderr)

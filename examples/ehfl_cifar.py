@@ -18,7 +18,14 @@ import numpy as np
 from repro.checkpoint import save_pytree
 from repro.configs.cifar_cnn import CONFIG as PAPER_CNN
 from repro.configs.cifar_cnn import CNNConfig
-from repro.core import SCENARIOS, STREAM_SCENARIOS, EHFLConfig, run_batch, run_simulation
+from repro.core import (
+    CHANNEL_SCENARIOS,
+    SCENARIOS,
+    STREAM_SCENARIOS,
+    EHFLConfig,
+    run_batch,
+    run_simulation,
+)
 from repro.data import make_federated_dataset
 from repro.fl import cnn_backend
 
@@ -43,6 +50,15 @@ def main() -> None:
                          "make client data non-stationary over epochs")
     ap.add_argument("--stream-period", type=float, default=0.0,
                     help="override the drift/shift period (epochs; 0 = scenario default)")
+    ap.add_argument("--channel", default="ideal", choices=list(CHANNEL_SCENARIOS),
+                    help="uplink channel scenario (repro.core.channel): ideal "
+                         "is the paper's lossless uplink; erasure/aloha/fading "
+                         "drop uploads, which retry with capped exponential "
+                         "backoff and re-age their VAoI (DESIGN.md §12)")
+    ap.add_argument("--channel-params", default="",
+                    help="comma list of k=v channel knobs, e.g. "
+                         "'p_loss=0.3,concentration=1.0' (erasure), "
+                         "'num_channels=4' (aloha), 'p_bad=0.4,sojourn=2' (fading)")
     ap.add_argument("--num-seeds", type=int, default=1,
                     help=">1: vmapped multi-seed sweep in one jitted call (run_batch)")
     ap.add_argument("--fleet", action="store_true",
@@ -81,6 +97,11 @@ def main() -> None:
         harvest=args.harvest, stream=args.stream,
         stream_params=(("period", args.stream_period),)
         if args.stream_period > 0 and args.stream in ("drift", "shift") else (),
+        channel=args.channel,
+        channel_params=tuple(
+            (k, float(v))
+            for k, v in (kv.split("=", 1) for kv in args.channel_params.split(",") if kv)
+        ),
     )
     backend = cnn_backend(cnn)
     t0 = time.time()

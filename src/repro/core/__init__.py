@@ -1,5 +1,7 @@
 # The paper's primary contribution: feature-based semantics-aware (VAoI)
 # scheduling for energy-harvesting federated learning.
+from repro.core.channel import SCENARIOS as CHANNEL_SCENARIOS  # noqa: F401
+from repro.core.channel import ChannelProcess, make_channel  # noqa: F401
 from repro.core.fleet import run_fleet  # noqa: F401
 from repro.core.harvest import SCENARIOS, HarvestProcess, make_process  # noqa: F401
 from repro.core.simulator import (  # noqa: F401

@@ -1,0 +1,243 @@
+"""Lossy-uplink channel library — pluggable delivery processes (DESIGN.md §12).
+
+The simulator's communication model was free AND perfectly reliable: every
+upload that left a client landed in the FedAvg round.  Real EHFL uplinks are
+neither — contention destroys colliding packets (multichannel slotted ALOHA,
+arXiv:2309.06033) and fading links black out for whole rounds
+(energy-constrained over-the-air scheduling, arXiv:2106.00490).  This module
+factors "did the upload land" out of the simulator behind the same tiny
+stateful protocol as the harvest and stream libraries (DESIGN.md §7/§10):
+
+  * ``init(key, n) -> state``   — per-simulation channel state;
+  * ``step(state, attempting) -> (delivered, state)`` — one epoch:
+    ``attempting`` is the (N,) bool mask of clients that transmitted this
+    epoch (the energy is already spent — a lost upload refunds nothing);
+    ``delivered`` is the (N,) bool subset whose message reached the server.
+
+``persistent`` mirrors the harvest/stream flag: ``ideal`` carries no state
+and consumes no PRNG key, which keeps the default configuration
+BIT-IDENTICAL to the pre-channel simulator (tested in
+``tests/test_channel.py``); the lossy scenarios own a key chain threaded
+through ``EpochCarry.channel``.
+
+What happens to a FAILED upload is the simulator's retry state machine, not
+the channel's (``simulator.epoch_body``, DESIGN.md §12): the message stays
+pending (an old-carrier retransmission next epoch), the client's retry
+counter drives capped exponential backoff, its VAoI re-ages by one version
+per failure, and after ``max_retries`` failures the message is dropped.
+
+Scenarios:
+
+  ideal    — always-deliver, stateless/keyless (the pre-channel behavior
+             and the default).
+  erasure  — i.i.d. per-upload loss.  Mean loss rate ``p_loss``; with
+             ``concentration`` c > 0 the per-client rates are drawn once
+             from Beta(c·p_loss, c·(1−p_loss)) (heterogeneous links, the
+             hetero-harvest profile applied to the uplink), else every
+             client shares the scalar rate.
+  aloha    — M-channel slotted ALOHA contention: each attempting client
+             picks one of ``num_channels`` uplink channels uniformly at
+             random; a channel carrying exactly one upload delivers it,
+             two or more collide and ALL colliding uploads are destroyed
+             (da Silva et al., arXiv:2309.06033).
+  fading   — Gilbert–Elliott good/bad link state per client: uploads
+             deliver while the link is good and are lost in outage
+             (bad state).  ``p_bad`` is the stationary bad fraction,
+             ``sojourn`` the phase-relaxation timescale (mean bad sojourn
+             sojourn/(1−p_bad) epochs) — the markov-harvest machinery
+             applied to the link.
+
+Client-sharded forms (``make_sharded_channel``) follow the fleet recipe of
+``harvest.make_sharded_process`` (DESIGN.md §9): every random draw keeps its
+single-device ``(n_global,)`` shape, computed from the replicated key, and
+each shard slices its own window — with explicit uniforms, never
+``random.categorical``.  ALOHA is the one scenario whose delivery decision
+needs CROSS-shard information (a collision can span shards), so its sharded
+step ``psum``s the per-channel contention counts over the fleet axis before
+testing each shard's occupancy — bit-identical to the solo counts because
+integer scatter-adds are order-free.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SCENARIOS = ("ideal", "erasure", "aloha", "fading")
+
+
+class ChannelProcess(NamedTuple):
+    """A stateful per-epoch uplink delivery process (see module docstring)."""
+
+    name: str
+    persistent: bool  # state survives across epochs (ideal carries none)
+    init: Callable[[jax.Array, int], Any]
+    step: Callable[[Any, jax.Array], Tuple[jax.Array, Any]]
+
+
+def _shard_slice(full: jax.Array, _shard, n_loc: int) -> jax.Array:
+    """This shard's (N_loc,) window of a globally-shaped (N,) draw.
+    ``_shard = (axis_name, n_global)`` under ``shard_map`` (DESIGN.md §9)."""
+    axis_name, _ = _shard
+    off = jax.lax.axis_index(axis_name) * n_loc
+    return jax.lax.dynamic_slice(full, (off,), (n_loc,))
+
+
+# ---------------------------------------------------------------------------
+# Scenarios
+# ---------------------------------------------------------------------------
+
+
+def ideal(_shard=None) -> ChannelProcess:
+    """Always-deliver: no state, no PRNG consumption — bit-identical to the
+    pre-channel simulator (the retry bookkeeping degenerates to no-ops on an
+    all-delivered mask)."""
+
+    def init(key: jax.Array, n: int):
+        return None
+
+    def step(state, attempting: jax.Array):
+        return attempting, None
+
+    return ChannelProcess("ideal", False, init, step)
+
+
+def erasure(p_loss: float = 0.2, concentration: float = 0.0, _shard=None) -> ChannelProcess:
+    """i.i.d. per-upload erasures at mean rate ``p_loss``; ``concentration``
+    c > 0 draws static per-client rates from Beta(c·p, c·(1−p)) instead
+    (heterogeneous links, mean still ``p_loss``)."""
+    p = min(1.0, max(0.0, float(p_loss)))
+    c = float(concentration)
+    hetero = c > 0.0 and 0.0 < p < 1.0
+
+    def init(key: jax.Array, n: int):
+        k_r, k_run = jax.random.split(key)
+        n_draw = n if _shard is None else _shard[1]
+        if hetero:
+            rates = jax.random.beta(k_r, c * p, c * (1.0 - p), (n_draw,))
+        else:
+            rates = jnp.full((n_draw,), p, jnp.float32)
+        if _shard is not None:
+            rates = _shard_slice(rates, _shard, n)
+        return rates.astype(jnp.float32), k_run
+
+    def step(state, attempting: jax.Array):
+        rates, key = state
+        k_u, k_next = jax.random.split(key)
+        n_loc = attempting.shape[0]
+        u = jax.random.uniform(k_u, (n_loc if _shard is None else _shard[1],))
+        if _shard is not None:
+            u = _shard_slice(u, _shard, n_loc)
+        return attempting & (u >= rates), (rates, k_next)
+
+    return ChannelProcess("erasure", True, init, step)
+
+
+def aloha(num_channels: float = 2, _shard=None) -> ChannelProcess:
+    """M-channel slotted ALOHA: attempting clients pick a channel uniformly;
+    exactly-one occupancy delivers, collisions destroy every colliding
+    upload.  The sharded form psums the per-channel contention counts over
+    the fleet axis (collisions span shards)."""
+    M = max(1, int(num_channels))
+
+    def init(key: jax.Array, n: int):
+        return key
+
+    def step(key, attempting: jax.Array):
+        k_c, k_next = jax.random.split(key)
+        n_loc = attempting.shape[0]
+        choice = jax.random.randint(
+            k_c, (n_loc if _shard is None else _shard[1],), 0, M
+        )
+        if _shard is not None:
+            choice = _shard_slice(choice, _shard, n_loc)
+        counts = jnp.zeros((M,), jnp.int32).at[choice].add(
+            attempting.astype(jnp.int32)
+        )
+        if _shard is not None:
+            counts = jax.lax.psum(counts, _shard[0])
+        return attempting & (counts[choice] == 1), k_next
+
+    return ChannelProcess("aloha", True, init, step)
+
+
+def fading(p_bad: float = 0.3, sojourn: float = 4.0, _shard=None) -> ChannelProcess:
+    """Gilbert–Elliott per-client link: good delivers, bad is outage.
+    Stationary bad fraction ``p_bad``; ``sojourn`` = 1/(g2b + b2g) sets the
+    burstiness (mean bad sojourn sojourn/(1−p_bad) epochs, mean good sojourn
+    sojourn/p_bad)."""
+    pb = min(1.0, max(0.0, float(p_bad)))
+    sojourn = max(1.0, float(sojourn))
+    g2b = pb / sojourn  # good -> bad
+    b2g = (1.0 - pb) / sojourn  # bad -> good
+
+    def init(key: jax.Array, n: int):
+        k_z, k_run = jax.random.split(key)
+        n_draw = n if _shard is None else _shard[1]
+        good = jax.random.bernoulli(k_z, 1.0 - pb, (n_draw,))
+        if _shard is not None:
+            good = _shard_slice(good, _shard, n)
+        return good, k_run
+
+    def step(state, attempting: jax.Array):
+        good, key = state
+        k_flip, k_next = jax.random.split(key)
+        delivered = attempting & good
+        n_loc = good.shape[0]
+        # bernoulli(k, p) == uniform(k, p.shape, dtype(p)) < p: explicit
+        # uniforms make the sliced sharded draw bit-exact by construction
+        u = jax.random.uniform(k_flip, (n_loc if _shard is None else _shard[1],))
+        if _shard is not None:
+            u = _shard_slice(u, _shard, n_loc)
+        flip = u < jnp.where(good, g2b, b2g)
+        return delivered, (good ^ flip, k_next)
+
+    return ChannelProcess("fading", True, init, step)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_FACTORIES: dict = {
+    "ideal": ideal,
+    "erasure": erasure,
+    "aloha": aloha,
+    "fading": fading,
+}
+
+
+def make_channel(name: str, **params: float) -> ChannelProcess:
+    """Build a named channel scenario (config-side:
+    ``EHFLConfig(channel="name", channel_params=(("k", v),))``)."""
+    if name not in _FACTORIES:
+        raise ValueError(f"unknown channel scenario {name!r}; known: {SCENARIOS}")
+    return _FACTORIES[name](**params)
+
+
+def state_sharding_tree(name: str):
+    """Pytree matching the scenario's state structure: True where the leaf
+    is per-client (shard over the fleet axis), False where replicated
+    (keys).  ``ideal`` is stateless (None)."""
+    return {
+        "ideal": None,
+        "erasure": (True, False),  # (rates, key)
+        "aloha": False,  # key
+        "fading": (True, False),  # (good, key)
+    }[name]
+
+
+def make_sharded_channel(
+    name: str, *, axis_name: str, n_global: int, **params: float
+) -> ChannelProcess:
+    """Client-sharded counterpart of :func:`make_channel` for the fleet path
+    (DESIGN.md §9/§12): ``init(key, n_loc)`` / ``step(state, attempting_loc)``
+    operate on this shard's window under ``shard_map``, with per-client state
+    (erasure rates, fading link phases) local to the shard and keys
+    replicated — every draw BIT-IDENTICAL to the single-device channel via
+    global-draw-and-slice, and ALOHA's contention counts psum'd over the
+    fleet axis (asserted in ``tests/test_channel.py``)."""
+    if name not in _FACTORIES:
+        raise ValueError(f"unknown channel scenario {name!r}; known: {SCENARIOS}")
+    return _FACTORIES[name](_shard=(axis_name, n_global), **params)

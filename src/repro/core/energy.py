@@ -62,6 +62,7 @@ def scan_epoch(
     p_bc: float | None = None,
     process: harvest_lib.HarvestProcess | None = None,
     count_opportunity_fn: Callable[[jax.Array, SlotState], jax.Array] | None = None,
+    tx_allowed: jax.Array | None = None,
 ) -> SlotState:
     """Run S slots of battery/action dynamics. Returns the post-epoch state.
 
@@ -74,6 +75,11 @@ def scan_epoch(
 
     ``count_opportunity_fn`` (FedBacys-Odd): mask of clients whose opportunity
     counter increments this slot (criteria (i)-(iii) met).
+
+    ``tx_allowed`` (lossy-channel backoff, DESIGN.md §12): (N,) bool mask of
+    clients permitted to transmit this epoch — a client under retry backoff
+    holds its pending message (and its energy) without contending.  ``None``
+    (and an all-True mask) leaves the dynamics unchanged.
     """
     if process is None:
         if p_bc is None:
@@ -117,6 +123,8 @@ def scan_epoch(
         pending = st.pending | done_now
         # --- transmit (cannot transmit while busy; 1 unit) ---
         can_tx = pending & ~busy & ~done_now & (battery >= 1) & ~st.uploaded
+        if tx_allowed is not None:
+            can_tx = can_tx & tx_allowed
         battery = battery - can_tx.astype(battery.dtype)
         energy_used = energy_used + can_tx.astype(energy_used.dtype)
         pending = pending & ~can_tx

@@ -5,8 +5,9 @@ mesh's ``data`` axis (DESIGN.md §9).
 ``msg_params`` alone is N full model copies.  :func:`run_fleet` runs the SAME
 ``simulator.epoch_body`` under ``shard_map``: the global model and PRNG key
 stay replicated, while ``msg_params``, ``h``, ``age``, ``battery``,
-``pending``, ``counter``, the client datasets, and the per-client harvest
-and data-stream state live on their shard of the fleet.  Only the
+``pending``, ``counter``, ``retries``, ``backoff``, the client datasets, and
+the per-client harvest, data-stream, and uplink-channel state live on their
+shard of the fleet.  Only the
 :class:`EpochOps` points differ from the solo path:
 
   * Alg. 2 selection — distributed top-k (``vaoi.select_topk_sharded``):
@@ -37,6 +38,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import channel as channel_lib
 from repro.core import harvest as harvest_lib
 from repro.core import policies as policy_lib
 from repro.data import stream as stream_lib
@@ -115,11 +117,15 @@ def make_fleet_epoch_fn(
         cfg.stream, axis_name=axis_name, n_global=cfg.num_clients,
         **stream_params,
     )
+    chan = channel_lib.make_sharded_channel(
+        cfg.channel, axis_name=axis_name, n_global=cfg.num_clients,
+        **dict(cfg.channel_params),
+    )
     ops = fleet_ops(cfg, use_kernel, axis_name)
     return lambda carry, t, images, labels: epoch_body(
         carry, t, images, labels,
         cfg=cfg, backend=backend, spec=spec, process=process, ops=ops,
-        stream=stream, use_kernel=use_kernel,
+        stream=stream, channel=chan, use_kernel=use_kernel,
     )
 
 
@@ -136,12 +142,18 @@ def _carry_pspecs(cfg: EHFLConfig, carry_struct: EpochCarry) -> EpochCarry:
     if carry_struct.stream is not None:
         sflags = stream_lib.state_sharding_tree(cfg.stream)
         sspec = jax.tree.map(lambda f: cl if f else rep, sflags)
+    cspec = None
+    if carry_struct.channel is not None:
+        cflags = channel_lib.state_sharding_tree(cfg.channel)
+        cspec = jax.tree.map(lambda f: cl if f else rep, cflags)
     return EpochCarry(
         global_params=jax.tree.map(lambda _: rep, carry_struct.global_params),
         msg_params=jax.tree.map(lambda _: cl, carry_struct.msg_params),
         h=cl, age=cl, battery=cl, pending=cl, counter=cl, key=rep,
         harvest=hspec,
         stream=sspec,
+        retries=cl, backoff=cl,
+        channel=cspec,
     )
 
 

@@ -26,6 +26,7 @@ from typing import Any, Callable, Dict, NamedTuple, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import channel as channel_lib
 from repro.core import energy as energy_lib
 from repro.core import harvest as harvest_lib
 from repro.core import policies as policy_lib
@@ -62,6 +63,18 @@ class EHFLConfig:
     # (name, value) tuple convention as harvest_params.
     stream: str = "static"
     stream_params: Tuple[Tuple[str, float], ...] = ()
+    # uplink channel scenario (repro.core.channel; "ideal" is the lossless
+    # pre-channel behavior and reproduces it exactly).  Same (name, value)
+    # tuple convention as harvest_params/stream_params.
+    channel: str = "ideal"
+    channel_params: Tuple[Tuple[str, float], ...] = ()
+    # retry state machine for failed uploads (DESIGN.md §12): a failed
+    # carrier re-queues with capped exponential backoff (skip
+    # min(2^(attempts-1), backoff_cap) epochs before re-contending) and is
+    # dropped outright after max_retries failures — the spent energy is
+    # never refunded.
+    max_retries: int = 3
+    backoff_cap: int = 8
     # active-set compaction (DESIGN.md §11): train only the clients that
     # actually started this epoch, gathered into a static-size slab of
     # ``PolicySpec.max_active`` lanes.  "auto" (the default) compacts
@@ -81,6 +94,9 @@ class EHFLConfig:
         if num_classes is not None and self.stream in stream_lib.CLASS_CONDITIONED:
             params.setdefault("num_classes", num_classes)
         return stream_lib.make_stream(self.stream, **params)
+
+    def channel_process(self) -> channel_lib.ChannelProcess:
+        return channel_lib.make_channel(self.channel, **dict(self.channel_params))
 
 
 class Backend(NamedTuple):
@@ -109,6 +125,15 @@ class EpochCarry(NamedTuple):
     # persistent DataStream state (None for the stateless "static" stream —
     # see DESIGN.md §10)
     stream: Any = None
+    # lossy-uplink retry state machine (DESIGN.md §12): per-client count of
+    # failed delivery attempts for the CURRENT pending message, and epochs
+    # left to sit out before re-contending (capped exponential backoff).
+    # Both stay all-zero under the "ideal" channel.
+    retries: Any = None  # (N,) int32
+    backoff: Any = None  # (N,) int32
+    # persistent ChannelProcess state (None for the stateless "ideal"
+    # default — see DESIGN.md §12)
+    channel: Any = None
 
 
 def _local_train(
@@ -284,6 +309,14 @@ def init_carry(cfg: EHFLConfig, backend: Backend, seed: jax.Array | int | None =
     if data_stream.persistent:
         k_run, k_stream = jax.random.split(k_run)
         sstate = data_stream.init(k_stream, N)
+    # channel state splits AFTER stream state (same chain-preservation rule:
+    # the stateless "ideal" default splits nothing, so harvest/stream PRNG
+    # chains — and the whole default trajectory — stay bit-identical)
+    chan = cfg.channel_process()
+    cstate = None
+    if chan.persistent:
+        k_run, k_chan = jax.random.split(k_run)
+        cstate = chan.init(k_chan, N)
     return EpochCarry(
         global_params=global_params,
         msg_params=msg_params,
@@ -295,6 +328,9 @@ def init_carry(cfg: EHFLConfig, backend: Backend, seed: jax.Array | int | None =
         key=k_run,
         harvest=hstate,
         stream=sstate,
+        retries=jnp.zeros((N,), jnp.int32),
+        backoff=jnp.zeros((N,), jnp.int32),
+        channel=cstate,
     )
 
 
@@ -337,13 +373,16 @@ def epoch_body(
     process: harvest_lib.HarvestProcess,
     ops: EpochOps,
     stream: stream_lib.DataStream | None = None,
+    channel: channel_lib.ChannelProcess | None = None,
     use_kernel: bool = False,
 ) -> Tuple[EpochCarry, Dict[str, jax.Array]]:
     """One epoch of Alg. 1 over the clients in ``carry`` (all N, or one
     shard's slice when driven by ``core/fleet.py`` — ``ops`` carries the
     only four operations that differ).  ``images``/``labels`` are the
     per-client sample POOLS; ``stream`` turns them into this epoch's view
-    (DESIGN.md §10; ``None`` and the "static" stream are the identity)."""
+    (DESIGN.md §10; ``None`` and the "static" stream are the identity).
+    ``channel`` decides which uploads actually land (DESIGN.md §12; ``None``
+    and the "ideal" channel deliver everything, bit-identically)."""
     N, S, kappa = cfg.num_clients, cfg.slots_per_epoch, cfg.kappa
     n_loc = carry.age.shape[0]
     k_sel, k_scan, k_train, k_next = jax.random.split(carry.key, 4)
@@ -391,7 +430,45 @@ def epoch_body(
     st = energy_lib.scan_epoch(
         st0, S=S, kappa=kappa, e_max=cfg.e_max, process=process,
         want_fn=want_fn, count_opportunity_fn=opp_fn,
+        # retry backoff gates transmission for the whole epoch (the pending
+        # message — and its energy — is held, not re-contended)
+        tx_allowed=(carry.backoff == 0) if channel is not None else None,
     )
+
+    # --- uplink channel + retry state machine (DESIGN.md §12) ---
+    # ``st.uploaded`` clients SPENT a transmission unit; the channel decides
+    # whose message landed.  A failed carrier re-queues (pending again, an
+    # old-carrier retransmission once its backoff expires), re-ages its VAoI
+    # by one version per failure, and is dropped after max_retries — the
+    # energy is never refunded.
+    upload_mask = st.uploaded
+    pending_out, retries_out, backoff_out, cstate_out = (
+        st.pending, carry.retries, carry.backoff, None
+    )
+    failed = dropped = None
+    if channel is not None:
+        delivered, cstate_out = channel.step(carry.channel, st.uploaded)
+        failed = st.uploaded & ~delivered
+        attempts = carry.retries + failed.astype(jnp.int32)
+        dropped = failed & (attempts >= cfg.max_retries)
+        retrying = failed & ~dropped
+        # capped exponential backoff: sit out min(2^(attempts-1), cap)
+        # epochs before re-contending (attempt counts are tiny, but the
+        # shift is clamped so a misconfigured max_retries can't overflow)
+        boff = jnp.minimum(
+            jnp.left_shift(1, jnp.minimum(attempts - 1, 30)), cfg.backoff_cap
+        ).astype(jnp.int32)
+        upload_mask = delivered
+        pending_out = st.pending | retrying
+        retries_out = jnp.where(
+            delivered | dropped, 0, jnp.where(retrying, attempts, carry.retries)
+        )
+        backoff_out = jnp.where(retrying, boff, jnp.maximum(carry.backoff - 1, 0))
+        # VAoI re-aging: the scheduler must see the server's TRUE staleness —
+        # a lost version is one more version the server is behind by
+        age = age + failed.astype(age.dtype)
+        if not channel.persistent:
+            cstate_out = None
 
     # --- local training (only VAoI policies read the Eq. 6 moment h) ---
     pending_in = carry.pending  # entered the epoch with an unsent (old) message?
@@ -411,7 +488,8 @@ def epoch_body(
         msg_params = sel(trained, carry.msg_params)
         h = jnp.where(started_m[:, None], h_new, carry.h) if spec.uses_vaoi else carry.h
 
-        # aggregation (uploads of this epoch; old-pending uploads use old msgs)
+        # aggregation (DELIVERED uploads of this epoch; old-pending uploads
+        # use old msgs — a lossy channel shrinks the mask, never the msgs)
         contrib = jax.tree.map(
             lambda old, new: jnp.where(
                 pending_in.reshape((-1,) + (1,) * (old.ndim - 1)), old, new
@@ -419,7 +497,7 @@ def epoch_body(
             carry.msg_params,
             msg_params,
         )
-        new_global = ops.masked_mean(contrib, st.uploaded, carry.global_params)
+        new_global = ops.masked_mean(contrib, upload_mask, carry.global_params)
     else:
         # --- active-set compaction (DESIGN.md §11): gather the started
         # clients into a static (cap_loc, ...) slab, train only the slab,
@@ -445,21 +523,29 @@ def epoch_body(
             else carry.h
         )
 
-        # aggregation: fresh uploads (uploaded & ~pending_in, a subset of
-        # started) reduce over the slab; pending_in carriers upload their
-        # OLD message from the N-wide msg tree (bandwidth-only pass)
-        slab_new = (st.uploaded & ~pending_in)[slab_idx] & slab_valid
-        old_mask = st.uploaded & pending_in
+        # aggregation: fresh DELIVERED uploads (delivered & ~pending_in, a
+        # subset of started) reduce over the slab; pending_in carriers upload
+        # their OLD message from the N-wide msg tree (bandwidth-only pass).
+        # The channel's delivery mask gates both passes identically to the
+        # dense path, so lossy compact == lossy dense stays exact.
+        slab_new = (upload_mask & ~pending_in)[slab_idx] & slab_valid
+        old_mask = upload_mask & pending_in
         new_global = ops.compact_mean(
             trained, slab_new, carry.msg_params, old_mask, carry.global_params
         )
 
+    zero = jnp.zeros((), jnp.int32)
     metrics = {
         "energy": ops.reduce_sum(st.energy_used),
         "avg_age": ops.reduce_sum(age) / N,
         "n_started": ops.reduce_sum(st.started.astype(jnp.int32)),
         "n_uploaded": ops.reduce_sum(st.uploaded.astype(jnp.int32)),
         "avg_m": ops.reduce_sum(m) / N,
+        # channel outcomes: n_uploaded counts ATTEMPTS (energy spent);
+        # n_delivered what landed; n_failed/n_dropped the channel's toll
+        "n_delivered": ops.reduce_sum(upload_mask.astype(jnp.int32)),
+        "n_failed": ops.reduce_sum(failed.astype(jnp.int32)) if failed is not None else zero,
+        "n_dropped": ops.reduce_sum(dropped.astype(jnp.int32)) if dropped is not None else zero,
     }
     return (
         EpochCarry(
@@ -468,11 +554,14 @@ def epoch_body(
             h=h,
             age=age,
             battery=st.battery,
-            pending=st.pending,
+            pending=pending_out,
             counter=st.counter,
             key=k_next,
             harvest=st.harvest if process.persistent else None,
             stream=st.stream if stream is not None and stream.persistent else None,
+            retries=retries_out,
+            backoff=backoff_out,
+            channel=cstate_out,
         ),
         metrics,
     )
@@ -491,11 +580,12 @@ def make_epoch_fn(
     )
     process = cfg.harvest_process()
     stream = cfg.data_stream(backend.num_classes)
+    chan = cfg.channel_process()
     ops = solo_ops(cfg, use_kernel)
     return lambda carry, t: epoch_body(
         carry, t, data["images"], data["labels"],
         cfg=cfg, backend=backend, spec=spec, process=process, ops=ops,
-        stream=stream, use_kernel=use_kernel,
+        stream=stream, channel=chan, use_kernel=use_kernel,
     )
 
 

@@ -60,8 +60,11 @@ def _cfg(**kw):
     return EHFLConfig(**base)
 
 
-INT_METRICS = ("energy", "n_started", "n_uploaded", "avg_age", "f1_epochs")
-INT_CARRY = ("age", "battery", "pending", "counter")
+INT_METRICS = (
+    "energy", "n_started", "n_uploaded", "n_delivered", "n_failed",
+    "n_dropped", "avg_age", "f1_epochs",
+)
+INT_CARRY = ("age", "battery", "pending", "counter", "retries", "backoff")
 
 
 def _assert_equiv(dense, compact, f1_atol=0.1):
@@ -83,23 +86,34 @@ def _assert_equiv(dense, compact, f1_atol=0.1):
     )
 
 
-# a latin square over (policy, harvest scenario, data stream): all 5 policies,
-# a spread of harvest and stream scenarios, each row exercising all three
-# drivers (solo dense vs solo/batch/fleet compact)
+# a latin square over (policy, harvest scenario, data stream, uplink
+# channel): all 5 policies, a spread of harvest/stream/channel scenarios,
+# each row exercising all three drivers (solo dense vs solo/batch/fleet
+# compact) — lossy channels compose with compaction because old-carrier
+# retransmissions ride the same pending_in fallback as seed old carriers
+_CHANNEL_PARAMS = {
+    "ideal": (),
+    "erasure": (("p_loss", 0.4),),
+    "aloha": (("num_channels", 2.0),),
+    "fading": (("p_bad", 0.4), ("sojourn", 2.0)),
+}
+
+
 @pytest.mark.parametrize(
-    "policy,scenario,stream",
+    "policy,scenario,stream,channel",
     [
-        ("vaoi", "bernoulli", "static"),
-        ("vaoi_soft", "markov", "drift"),
-        ("fedbacys", "diurnal", "arrival"),
-        ("fedbacys_odd", "hetero", "shift"),
-        ("fedavg", "bernoulli", "drift"),  # auto-dense fallback row
+        ("vaoi", "bernoulli", "static", "ideal"),
+        ("vaoi_soft", "markov", "drift", "erasure"),
+        ("fedbacys", "diurnal", "arrival", "aloha"),
+        ("fedbacys_odd", "hetero", "shift", "fading"),
+        ("fedavg", "bernoulli", "drift", "erasure"),  # auto-dense fallback row
     ],
 )
-def test_compact_matches_dense(policy, scenario, stream, world, backend):
+def test_compact_matches_dense(policy, scenario, stream, channel, world, backend):
     cfg = _cfg(
         policy=policy, harvest=scenario, stream=stream,
         stream_params=(("period", 3.0),) if stream in ("drift", "shift") else (),
+        channel=channel, channel_params=_CHANNEL_PARAMS[channel],
     )
     spec = policy_lib.make_policy(cfg.policy, num_clients=N, k=cfg.k)
     dense = run_simulation(dataclasses.replace(cfg, compact=False), backend, world)

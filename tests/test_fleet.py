@@ -63,7 +63,10 @@ def _assert_fleet_matches_solo(cfg, backend, data, use_kernel=False):
     solo = run_simulation(cfg, backend, data, use_kernel=use_kernel)
     fleet = run_fleet(cfg, backend, data, use_kernel=use_kernel)
     ms, mf = solo["metrics"], fleet["metrics"]
-    for k in ("energy", "n_started", "n_uploaded", "avg_age", "f1_epochs"):
+    for k in (
+        "energy", "n_started", "n_uploaded", "n_delivered", "n_failed",
+        "n_dropped", "avg_age", "f1_epochs",
+    ):
         np.testing.assert_array_equal(np.asarray(ms[k]), np.asarray(mf[k]), err_msg=k)
     # the continuous quantities agree to fp32 rounding *amplified by
     # training*: psum vs full-axis summation order differs in the last ulp,
@@ -81,7 +84,7 @@ def _assert_fleet_matches_solo(cfg, backend, data, use_kernel=False):
     # parameter differences can flip individual predictions, so its
     # granularity — not fp32 — sets the tolerance
     np.testing.assert_allclose(np.asarray(ms["f1"]), np.asarray(mf["f1"]), atol=0.1)
-    for f in ("age", "battery", "pending", "counter"):
+    for f in ("age", "battery", "pending", "counter", "retries", "backoff"):
         np.testing.assert_array_equal(
             np.asarray(getattr(solo["carry"], f)),
             np.asarray(getattr(fleet["carry"], f)),
@@ -89,25 +92,35 @@ def _assert_fleet_matches_solo(cfg, backend, data, use_kernel=False):
         )
 
 
-# a latin square over (N, policy, harvest scenario, data stream): every
-# policy, every harvest scenario, and every stream scenario runs end to end,
-# both fleet sizes see a spread of each, without the full 5x4x4x2 cross
+# a latin square over (N, policy, harvest scenario, data stream, uplink
+# channel): every policy, harvest scenario, stream scenario, and channel
+# scenario runs end to end, both fleet sizes see a spread of each, without
+# the full 5x4x4x4x2 cross
+_CHANNEL_PARAMS = {
+    "ideal": (),
+    "erasure": (("p_loss", 0.4),),
+    "aloha": (("num_channels", 2.0),),
+    "fading": (("p_bad", 0.4), ("sojourn", 2.0)),
+}
+
+
 @pytest.mark.parametrize(
-    "n,policy,scenario,stream",
+    "n,policy,scenario,stream,channel",
     [
-        (16, "vaoi", "bernoulli", "static"),
-        (16, "fedbacys", "markov", "drift"),
-        (16, "fedbacys_odd", "diurnal", "arrival"),
-        (16, "vaoi_soft", "hetero", "shift"),
-        (64, "vaoi", "markov", "arrival"),
-        (64, "fedbacys", "bernoulli", "shift"),
-        (64, "fedavg", "hetero", "drift"),
+        (16, "vaoi", "bernoulli", "static", "ideal"),
+        (16, "fedbacys", "markov", "drift", "erasure"),
+        (16, "fedbacys_odd", "diurnal", "arrival", "aloha"),
+        (16, "vaoi_soft", "hetero", "shift", "fading"),
+        (64, "vaoi", "markov", "arrival", "erasure"),
+        (64, "fedbacys", "bernoulli", "shift", "aloha"),
+        (64, "fedavg", "hetero", "drift", "fading"),
     ],
 )
-def test_fleet_matches_solo(n, policy, scenario, stream, worlds, backend):
+def test_fleet_matches_solo(n, policy, scenario, stream, channel, worlds, backend):
     cfg = _cfg(
         n, policy=policy, harvest=scenario, stream=stream,
         stream_params=(("period", 3.0),) if stream in ("drift", "shift") else (),
+        channel=channel, channel_params=_CHANNEL_PARAMS[channel],
     )
     _assert_fleet_matches_solo(cfg, backend, worlds[n])
 

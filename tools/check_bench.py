@@ -1,6 +1,6 @@
 #!/usr/bin/env python
 """Validate the machine-readable BENCH_*.json perf files and gate on fleet
-throughput regressions (the CI ``bench-smoke`` job).
+and channel throughput regressions (the CI ``bench-smoke`` job).
 
 Checks:
   * schema — every ``BENCH_*.json`` at the repo root is an object with
@@ -8,12 +8,20 @@ Checks:
     non-empty ``rows`` list of flat dicts; every numeric value is finite
     (NaN/inf reject) and every throughput/latency field
     (``clients_per_s``, ``epoch_s``) is strictly positive;
-  * regression — the fresh ``BENCH_fleet.json`` is compared row-by-row
-    (matched on ``(N, shards, policy)``) against a baseline (default: the
-    committed ``git show HEAD:BENCH_fleet.json``); any ``clients_per_s``
-    drop beyond ``--max-regress`` (default 30%) fails.  Rows whose topology
-    has no baseline counterpart are skipped with a note, so local runs on
-    odd device counts don't false-alarm.  Absolute throughput is
+  * channel semantics — in ``BENCH_channel.json`` every lossy row
+    (scenario != ``ideal``) has ``delivery_rate`` in (0, 1] (a 0 means the
+    channel silenced the fleet entirely — the grid's loss knobs are mis-
+    sized), and every ``ideal`` row has ``delivery_rate`` == 1 with zero
+    retries/drops; the ideal rows must also BIT-MATCH the static cells of
+    ``BENCH_stream.json`` (same policy/N/epochs/compact: f1, avg_age_mean,
+    avg_m_mean, n_uploaded identical — the ideal channel IS the pre-channel
+    simulator, DESIGN.md §12);
+  * regression — fresh ``BENCH_fleet.json``/``BENCH_channel.json`` are
+    compared row-by-row (matched on topology/scenario + policy + compaction)
+    against a baseline (default: the committed ``git show HEAD:`` copy); any
+    ``clients_per_s`` drop beyond ``--max-regress`` (default 30%) fails.
+    Rows with no baseline counterpart are skipped with a note, so local runs
+    on odd device counts don't false-alarm.  Absolute throughput is
     machine-sensitive, so the gate only fires when the two files carry the
     same host fingerprint (``devices``/``backend``/``cpus``); on a
     different machine class it prints a loud note instead — commit the
@@ -36,6 +44,9 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 THROUGHPUT_KEYS = ("clients_per_s", "epoch_s")
+# the fields an ideal channel row must reproduce bit-for-bit from the
+# corresponding BENCH_stream static cell (both files round identically)
+IDEAL_MATCH_KEYS = ("f1", "avg_age_mean", "avg_m_mean", "n_uploaded")
 
 
 def _fail(errors: list, msg: str) -> None:
@@ -69,7 +80,7 @@ def check_schema(path: Path, doc: object, errors: list) -> None:
                     _fail(errors, f"{name}: rows[{i}].{k} must be > 0 (got {v})")
 
 
-def _row_key(row: dict) -> tuple:
+def _fleet_key(row: dict) -> tuple:
     """Fleet rows are matched on topology + policy + compaction mode, so the
     compact rows are gated against their own baseline exactly like dense
     ones (a dense row never masks a compact regression or vice versa).
@@ -83,23 +94,36 @@ def _row_key(row: dict) -> tuple:
     )
 
 
-def load_baseline(arg: str | None) -> dict | None:
-    """Baseline BENCH_fleet.json: an explicit path, else the committed copy."""
+def _channel_key(row: dict) -> tuple:
+    """Channel rows are matched on scenario + its knob settings + policy +
+    compaction + N (an erasure p_loss=0.2 row never gates a p_loss=0.8 one)."""
+    params = row.get("params")
+    return (
+        row.get("N"),
+        row.get("scenario"),
+        tuple(sorted(params.items())) if isinstance(params, dict) else None,
+        row.get("policy"),
+        bool(row.get("compact", False)),
+    )
+
+
+def load_baseline(arg: str | None, filename: str) -> dict | None:
+    """Baseline BENCH file: an explicit path, else the committed copy."""
     if arg:
         return json.loads(Path(arg).read_text())
     try:
         blob = subprocess.run(
-            ["git", "show", "HEAD:BENCH_fleet.json"],
+            ["git", "show", f"HEAD:{filename}"],
             cwd=REPO, capture_output=True, text=True, check=True,
         ).stdout
         return json.loads(blob)
     except (subprocess.CalledProcessError, FileNotFoundError, json.JSONDecodeError) as e:
-        print(f"  note: no committed BENCH_fleet.json baseline ({e}); "
+        print(f"  note: no committed {filename} baseline ({e}); "
               "skipping regression check")
         return None
 
 
-def comparable_hosts(fresh: dict, baseline: dict) -> bool:
+def comparable_hosts(fresh: dict, baseline: dict, filename: str) -> bool:
     """Throughput is only comparable across runs on the same machine class:
     identical device count, backend, and (when both files record it) CPU
     count.  Older baselines without ``cpus`` compare on devices/backend."""
@@ -108,23 +132,25 @@ def comparable_hosts(fresh: dict, baseline: dict) -> bool:
         if a is not None and b is not None and a != b:
             print(f"  note: {field} differs from baseline ({a} vs {b}); host "
                   "classes are not comparable — SKIPPING the throughput gate. "
-                  "If the runner class changed, commit the fresh "
-                  "BENCH_fleet.json (CI uploads it as an artifact) to re-arm.")
+                  f"If the runner class changed, commit the fresh "
+                  f"{filename} (CI uploads it as an artifact) to re-arm.")
             return False
     return True
 
 
-def check_regression(fresh: dict, baseline: dict, max_regress: float, errors: list) -> None:
-    if not comparable_hosts(fresh, baseline):
+def check_regression(
+    fresh: dict, baseline: dict, max_regress: float, errors: list,
+    *, filename: str = "BENCH_fleet.json", key_fn=_fleet_key,
+) -> None:
+    if not comparable_hosts(fresh, baseline, filename):
         return
-    base_rows = {_row_key(r): r for r in baseline.get("rows", []) if isinstance(r, dict)}
+    base_rows = {key_fn(r): r for r in baseline.get("rows", []) if isinstance(r, dict)}
     compared = 0
     for row in fresh.get("rows", []):
-        key = _row_key(row)
+        key = key_fn(row)
         base = base_rows.get(key)
         if base is None:
-            print(f"  note: no baseline row for N={key[0]} shards={key[1]} "
-                  f"policy={key[2]} compact={key[3]}; skipping")
+            print(f"  note: no baseline row for {key}; skipping")
             continue
         now, ref = row.get("clients_per_s"), base.get("clients_per_s")
         if not isinstance(now, (int, float)) or not isinstance(ref, (int, float)) or ref <= 0:
@@ -132,21 +158,81 @@ def check_regression(fresh: dict, baseline: dict, max_regress: float, errors: li
         compared += 1
         drop = 1.0 - now / ref
         status = "REGRESSION" if drop > max_regress else "ok"
-        print(f"  fleet N={key[0]} shards={key[1]} compact={key[3]}: {now:.1f} "
+        print(f"  {filename} {key}: {now:.1f} "
               f"vs baseline {ref:.1f} clients/s ({-drop:+.1%}) {status}")
         if drop > max_regress:
-            _fail(errors, f"BENCH_fleet.json: N={key[0]} compact={key[3]} "
-                          f"clients_per_s regressed {drop:.1%} "
-                          f"(> {max_regress:.0%} allowed)")
+            _fail(errors, f"{filename}: {key} clients_per_s regressed "
+                          f"{drop:.1%} (> {max_regress:.0%} allowed)")
     if compared == 0:
-        print("  note: no comparable fleet rows (topology changed?); "
+        print(f"  note: no comparable {filename} rows (grid changed?); "
               "regression check vacuous")
+
+
+def check_channel_semantics(doc: dict, errors: list) -> None:
+    """Delivery-rate sanity per row (see module docstring)."""
+    for i, row in enumerate(doc.get("rows", [])):
+        if not isinstance(row, dict):
+            continue
+        rate = row.get("delivery_rate")
+        if not isinstance(rate, (int, float)):
+            _fail(errors, f"BENCH_channel.json: rows[{i}] missing delivery_rate")
+            continue
+        if row.get("scenario") == "ideal":
+            if rate != 1.0 or row.get("retries") or row.get("drops"):
+                _fail(errors, f"BENCH_channel.json: rows[{i}] is ideal but "
+                              f"lossy (rate={rate}, retries={row.get('retries')}, "
+                              f"drops={row.get('drops')})")
+        elif not 0.0 < rate <= 1.0:
+            _fail(errors, f"BENCH_channel.json: rows[{i}] "
+                          f"({row.get('scenario')}/{row.get('policy')}) "
+                          f"delivery_rate must be in (0, 1]; got {rate}")
+
+
+def check_ideal_bitmatch(channel_doc: dict, errors: list) -> None:
+    """Every ideal channel row must reproduce the matching BENCH_stream
+    static cell bit-for-bit — the ideal channel is the pre-channel simulator."""
+    stream_path = REPO / "BENCH_stream.json"
+    if not stream_path.exists():
+        print("  note: no BENCH_stream.json; skipping ideal bit-match check")
+        return
+    try:
+        stream_doc = json.loads(stream_path.read_text())
+    except json.JSONDecodeError:
+        return  # schema pass on the stream file reports this
+    static = {
+        (r.get("policy"), r.get("N"), r.get("epochs"), bool(r.get("compact", False))): r
+        for r in stream_doc.get("rows", [])
+        if isinstance(r, dict) and r.get("scenario") == "static"
+    }
+    matched = 0
+    for i, row in enumerate(channel_doc.get("rows", [])):
+        if not isinstance(row, dict) or row.get("scenario") != "ideal":
+            continue
+        key = (row.get("policy"), row.get("N"), row.get("epochs"),
+               bool(row.get("compact", False)))
+        ref = static.get(key)
+        if ref is None:
+            print(f"  note: no BENCH_stream static cell for {key}; skipping")
+            continue
+        matched += 1
+        for k in IDEAL_MATCH_KEYS:
+            if row.get(k) != ref.get(k):
+                _fail(errors, f"BENCH_channel.json: ideal row {key} diverges "
+                              f"from the BENCH_stream static cell on {k!r} "
+                              f"({row.get(k)} != {ref.get(k)}) — the ideal "
+                              "channel must be bit-identical to the "
+                              "pre-channel simulator")
+    if matched:
+        print(f"  ideal bit-match: {matched} row(s) checked against "
+              "BENCH_stream static cells")
 
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default=None,
                     help="baseline BENCH_fleet.json path (default: git HEAD copy)")
+    ap.add_argument("--channel-baseline", default=None,
+                    help="baseline BENCH_channel.json path (default: git HEAD copy)")
     ap.add_argument("--max-regress", type=float, default=0.30,
                     help="max tolerated fractional clients_per_s drop (default 0.30)")
     args = ap.parse_args()
@@ -164,10 +250,21 @@ def main() -> int:
             _fail(errors, f"{path.name}: invalid JSON ({e})")
             continue
         check_schema(path, doc, errors)
-        if path.name == "BENCH_fleet.json" and isinstance(doc, dict):
-            baseline = load_baseline(args.baseline)
+        if not isinstance(doc, dict):
+            continue
+        if path.name == "BENCH_fleet.json":
+            baseline = load_baseline(args.baseline, "BENCH_fleet.json")
             if baseline is not None:
                 check_regression(doc, baseline, args.max_regress, errors)
+        elif path.name == "BENCH_channel.json":
+            check_channel_semantics(doc, errors)
+            check_ideal_bitmatch(doc, errors)
+            baseline = load_baseline(args.channel_baseline, "BENCH_channel.json")
+            if baseline is not None:
+                check_regression(
+                    doc, baseline, args.max_regress, errors,
+                    filename="BENCH_channel.json", key_fn=_channel_key,
+                )
     if errors:
         print(f"\nFAIL: {len(errors)} problem(s)")
         return 1
